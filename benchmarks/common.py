@@ -1,0 +1,69 @@
+"""Shared benchmark machinery: cached simulations + CSV output.
+
+Scale knob: REPRO_BENCH_SCALE=paper|small (default paper = the paper's
+128-GPU 8-rack CLOS; small = 32 GPUs for quick runs)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.cc import ALL_POLICIES, get_policy
+from repro.core.engine import EngineConfig, Results, simulate
+from repro.core.topology import clos, single_switch
+
+# small = 32 GPUs/2 racks (CI), mid = 64 GPUs/4 racks (default: paper
+# topology family at a tractable single-core runtime), paper = the full
+# 128-GPU/8-rack platform of §III-B (hours of fluid sim on one CPU core)
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "mid")
+OUTDIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
+
+_CACHE: dict = {}
+
+
+def paper_clos():
+    if SCALE == "small":
+        return clos(n_racks=2, nodes_per_rack=2, gpus_per_node=8), 32
+    if SCALE == "mid":
+        return clos(n_racks=4, nodes_per_rack=2, gpus_per_node=8), 64
+    return clos(n_racks=8, nodes_per_rack=2, gpus_per_node=8), 128
+
+
+def collective_size():
+    return {"small": 32e6, "mid": 64e6}.get(SCALE, 128e6)
+
+
+def engine_cfg(dt=2e-6, steps=4000):
+    if SCALE == "small":
+        return EngineConfig(dt=dt, max_steps=steps, max_extends=6)
+    return EngineConfig(dt=4e-6, max_steps=6000, max_extends=6)
+
+
+def run_cached(tag: str, topo, sched, policy_name: str,
+               cfg: EngineConfig) -> Results:
+    key = (tag, policy_name)
+    if key not in _CACHE:
+        t0 = time.time()
+        _CACHE[key] = simulate(topo, sched, get_policy(policy_name), cfg)
+        _CACHE[key].meta["wall_s"] = time.time() - t0
+    return _CACHE[key]
+
+
+def emit(rows: list[tuple]):
+    for r in rows:
+        print(",".join(str(x) for x in r), flush=True)
+
+
+def save_json(name: str, obj):
+    os.makedirs(OUTDIR, exist_ok=True)
+    with open(os.path.join(OUTDIR, name), "w") as f:
+        json.dump(obj, f, indent=1, default=float)
+
+
+def downsample(x: np.ndarray, n: int = 200) -> list:
+    if len(x) <= n:
+        return [float(v) for v in x]
+    idx = np.linspace(0, len(x) - 1, n).astype(int)
+    return [float(v) for v in x[idx]]

@@ -1,0 +1,169 @@
+"""One function per paper figure/table (paper Figs 3-10 + beyond-paper).
+
+Each returns CSV rows (figure,metric,...,value) and saves raw series to
+experiments/bench/*.json for inspection.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (collective_size, downsample, emit, engine_cfg,
+                               paper_clos, run_cached, save_json)
+from repro.core.cc import ALL_POLICIES, get_policy
+from repro.core.collectives import allreduce_1d, allreduce_2d, alltoall, incast
+from repro.core.engine import EngineConfig
+from repro.core.topology import single_switch
+from repro.core.workload import (DLRMCommSpec, DLRMComputeProfile,
+                                 simulate_dlrm_iteration)
+
+
+def fig3_incast():
+    """Fig 3: queue-length timeline + completion for 7->1 incast."""
+    topo = single_switch(8)
+    sched = incast(topo, list(range(1, 8)), 0, 10e6)
+    cfg = EngineConfig(dt=1e-6, max_steps=2000, max_extends=6)
+    rows, series = [], {}
+    for pol in ALL_POLICIES:
+        r = run_cached("incast", topo, sched, pol, cfg)
+        q = r.dev_queue[:, 8]
+        rows.append(("fig3", "completion_ms", pol, round(r.completion_time * 1e3, 4)))
+        rows.append(("fig3", "max_queue_mb", pol, round(float(q.max()) / 1e6, 3)))
+        rows.append(("fig3", "pfc_frames", pol, int(r.pause_count.sum())))
+        series[pol] = downsample(q)
+    save_json("fig3_queue_timelines.json", series)
+    return rows
+
+
+def fig4_single_switch_collectives():
+    """Fig 4: single-switch All-Reduce / All-To-All show no congestion."""
+    n = 8
+    topo = single_switch(n)
+    size = 10e6
+    cfg = EngineConfig(dt=1e-6, max_steps=3000, max_extends=6)
+    rows, series = [], {}
+    for name, sched in (("alltoall", alltoall(topo, list(range(n)), size)),
+                        ("allreduce", allreduce_1d(topo, list(range(n)), size))):
+        for pol in ("pfc", "dcqcn", "dctcp", "timely", "hpcc"):
+            r = run_cached(f"ss_{name}", topo, sched, pol, cfg)
+            q = r.dev_queue[:, n]  # the switch
+            rows.append(("fig4", f"{name}_completion_ms", pol,
+                         round(r.completion_time * 1e3, 4)))
+            rows.append(("fig4", f"{name}_max_queue_mb", pol,
+                         round(float(q.max()) / 1e6, 3)))
+            rows.append(("fig4", f"{name}_pfc_frames", pol, int(r.pause_count.sum())))
+            series[f"{name}_{pol}"] = downsample(q)
+    save_json("fig4_queue_timelines.json", series)
+    return rows
+
+
+def fig5_7_clos_queues():
+    """Figs 5/6/7: ToR vs Spine queue timelines + ECMP imbalance (A2A)."""
+    topo, n = paper_clos()
+    sched = alltoall(topo, list(range(n)), collective_size())
+    cfg = engine_cfg()
+    rows, series = [], {}
+    tor = topo.meta["tor_devs"]
+    spine = topo.meta["spine_devs"]
+    for pol in ALL_POLICIES:
+        r = run_cached("clos_a2a", topo, sched, pol, cfg)
+        tq = r.dev_queue[:, tor]
+        sq = r.dev_queue[:, spine]
+        rows.append(("fig6", "tor_max_queue_mb", pol, round(float(tq.max()) / 1e6, 3)))
+        rows.append(("fig7", "spine_max_queue_mb", pol, round(float(sq.max()) / 1e6, 3)))
+        if pol == "pfc":
+            # Fig 5: per-spine imbalance under ECMP
+            peaks = sq.max(axis=0)
+            rows.append(("fig5", "spine_peak_imbalance", pol,
+                         round(float(peaks.max() / max(peaks.min(), 1.0)), 2)))
+            series["spines_pfc"] = [downsample(sq[:, i]) for i in range(min(3, sq.shape[1]))]
+        series[f"tor_{pol}"] = downsample(tq.sum(axis=1))
+        series[f"spine_{pol}"] = downsample(sq.sum(axis=1))
+    save_json("fig5_7_queue_timelines.json", series)
+    return rows
+
+
+def fig8_completion():
+    """Fig 8: completion time of 1D/2D All-Reduce + All-To-All per CC."""
+    topo, n = paper_clos()
+    size = collective_size()
+    cfg = engine_cfg()
+    rows = []
+    scheds = {
+        "ar_1d": allreduce_1d(topo, list(range(n)), size),
+        "ar_2d": allreduce_2d(topo, list(range(n)), size),
+        "a2a": alltoall(topo, list(range(n)), size),
+    }
+    for name, sched in scheds.items():
+        for pol in ALL_POLICIES:
+            r = run_cached(f"clos_{name}" if name != "a2a" else "clos_a2a",
+                           topo, sched, pol, cfg)
+            rows.append(("fig8", f"{name}_completion_ms", pol,
+                         round(r.completion_time * 1e3, 4)))
+            if not r.finished:
+                rows.append(("fig8", f"{name}_UNFINISHED", pol, 1))
+    return rows
+
+
+def fig9_pfc_counts():
+    """Fig 9: PAUSE-frame counts per workload per CC."""
+    topo, n = paper_clos()
+    size = collective_size()
+    cfg = engine_cfg()
+    rows = []
+    scheds = {
+        "ar_1d": ("clos_ar_1d", allreduce_1d(topo, list(range(n)), size)),
+        "ar_2d": ("clos_ar_2d", allreduce_2d(topo, list(range(n)), size)),
+        "a2a": ("clos_a2a", alltoall(topo, list(range(n)), size)),
+    }
+    for name, (tag, sched) in scheds.items():
+        for pol in ALL_POLICIES:
+            r = run_cached(tag, topo, sched, pol, cfg)
+            rows.append(("fig9", f"{name}_pfc_frames", pol,
+                         int(r.pause_count.sum())))
+    return rows
+
+
+def fig10_dlrm_e2e():
+    """Fig 10: DLRM iteration = compute + exposed comm, per CC x {1D,2D}."""
+    topo, n = paper_clos()
+    cfg = engine_cfg()
+    rows = []
+    report = {}
+    for algo in ("2d", "1d"):
+        for pol in ALL_POLICIES:
+            rep = simulate_dlrm_iteration(
+                topo, list(range(n)), get_policy(pol),
+                comm=DLRMCommSpec(allreduce_algo=algo), cfg=cfg)
+            rows.append(("fig10", f"dlrm_{algo}_iter_ms", pol,
+                         round(rep.iteration_time * 1e3, 4)))
+            rows.append(("fig10", f"dlrm_{algo}_exposed_ms", pol,
+                         round(rep.exposed_comm * 1e3, 4)))
+            rows.append(("fig10", f"dlrm_{algo}_pfc_frames", pol, rep.pfc_pauses))
+            report[f"{algo}_{pol}"] = rep.__dict__
+    save_json("fig10_dlrm.json", {k: {kk: (vv if not hasattr(vv, "item") else float(vv))
+                                      for kk, vv in v.items()} for k, v in report.items()})
+    rows.append(("fig10", "total_compute_ms", "-",
+                 round(DLRMComputeProfile().total * 1e3, 4)))
+    return rows
+
+
+def fig11_static_window():
+    """Beyond-paper: the paper's §IV-E proposed static-window CC vs PFC."""
+    topo, n = paper_clos()
+    cfg = engine_cfg()
+    rows = []
+    for algo in ("2d",):
+        pfc = simulate_dlrm_iteration(topo, list(range(n)),
+                                      get_policy("pfc"),
+                                      comm=DLRMCommSpec(allreduce_algo=algo), cfg=cfg)
+        sw = simulate_dlrm_iteration(topo, list(range(n)),
+                                     get_policy("static_window"),
+                                     comm=DLRMCommSpec(allreduce_algo=algo), cfg=cfg)
+        rows.append(("fig11", "pfc_iter_ms", "pfc", round(pfc.iteration_time * 1e3, 4)))
+        rows.append(("fig11", "sw_iter_ms", "static_window",
+                     round(sw.iteration_time * 1e3, 4)))
+        rows.append(("fig11", "pfc_frames", "pfc", pfc.pfc_pauses))
+        rows.append(("fig11", "pfc_frames", "static_window", sw.pfc_pauses))
+        rows.append(("fig11", "slowdown_pct", "static_window",
+                     round((sw.iteration_time / pfc.iteration_time - 1) * 100, 2)))
+    return rows

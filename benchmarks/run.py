@@ -1,0 +1,43 @@
+# One function per paper table/figure. Prints ``figure,metric,policy,value``
+# CSV rows; roofline terms are derived from the dry-run artifacts when
+# present (run ``python -m repro.launch.dryrun --all`` first for those).
+from __future__ import annotations
+
+import os
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import figures
+    from benchmarks.common import emit
+
+    t00 = time.time()
+    print("figure,metric,policy,value")
+    for fn in (figures.fig3_incast,
+               figures.fig4_single_switch_collectives,
+               figures.fig5_7_clos_queues,
+               figures.fig8_completion,
+               figures.fig9_pfc_counts,
+               figures.fig10_dlrm_e2e,
+               figures.fig11_static_window):
+        t0 = time.time()
+        try:
+            emit(fn())
+        except Exception:
+            print(f"{fn.__name__},ERROR,-,1")
+            traceback.print_exc()
+        emit([(fn.__name__, "wall_s", "-", round(time.time() - t0, 1))])
+
+    # roofline (reads dry-run artifacts if present)
+    if os.path.isdir("experiments/dryrun") and os.listdir("experiments/dryrun"):
+        print("--- roofline (from dry-run artifacts) ---")
+        from benchmarks import roofline
+        roofline.main()
+    else:
+        print("roofline,SKIPPED (run: python -m repro.launch.dryrun --all)")
+    emit([("all", "total_wall_s", "-", round(time.time() - t00, 1))])
+
+
+if __name__ == "__main__":
+    main()

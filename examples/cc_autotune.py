@@ -1,0 +1,52 @@
+"""Beyond-paper: gradient-based CC parameter tuning through the
+differentiable fluid simulator.
+
+The paper complains that "DCQCN has many parameters that need to be tuned"
+and that per-workload tuning "is not a feasible solution".  Because our
+network layer is pure JAX, d(completion)/d(params) exists: this demo tunes
+DCQCN's increase rate + EWMA gain on the incast microbenchmark by plain
+gradient descent — no grid search.
+
+Run:  PYTHONPATH=src python examples/cc_autotune.py
+"""
+from repro.core.autotune import autotune
+from repro.core.cc import make_dcqcn
+from repro.core.collectives import incast
+from repro.core.engine import EngineConfig, simulate
+from repro.core.topology import single_switch
+
+
+def main():
+    topo = single_switch(8)
+    sched = incast(topo, list(range(1, 8)), 0, 10e6)
+    cfg = EngineConfig(dt=2e-6, max_steps=2200, max_extends=0)
+
+    res = autotune(topo, sched, make_dcqcn(), ["rai_frac", "rhai_frac", "g"],
+                   steps=10, lr=0.25, cfg=cfg)
+    print("history (soft cost = integral of undelivered fraction):")
+    for h in res.history:
+        print("  step %2d cost %.6f rai=%.4f rhai=%.4f g=%.5f"
+              % (h["step"], h["cost"], h["rai_frac"], h["rhai_frac"], h["g"]))
+    print(f"baseline {res.baseline_cost:.6f} -> tuned {res.tuned_cost:.6f}")
+
+    run_cfg = EngineConfig(dt=1e-6, max_steps=2000, max_extends=5)
+    before = simulate(topo, sched, make_dcqcn(), run_cfg)
+    tuned_pol = make_dcqcn(rai_frac=res.params["rai_frac"],
+                           rhai_frac=res.params["rhai_frac"], g=res.params["g"])
+    after = simulate(topo, sched, tuned_pol, run_cfg)
+
+    def mean_fct(r):
+        import numpy as np
+        return float(np.mean(r.t_finish[np.isfinite(r.t_finish)]))
+
+    # soft cost ~ MEAN flow completion (integral of undelivered traffic);
+    # report both mean and max so the objective/metric link is explicit
+    print(f"mean flow completion: default {mean_fct(before)*1e3:.3f} ms"
+          f" -> tuned {mean_fct(after)*1e3:.3f} ms")
+    print(f"last-flow completion: default {before.completion_time*1e3:.3f} ms"
+          f" -> tuned {after.completion_time*1e3:.3f} ms"
+          f" (PFC-only optimum = 2.80 ms)")
+
+
+if __name__ == "__main__":
+    main()

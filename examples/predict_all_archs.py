@@ -1,0 +1,94 @@
+"""Beyond-paper: CC-policy sensitivity for EVERY architecture.
+
+The paper answers "does the RoCE CC policy matter?" for DLRM only.  This
+driver reads each architecture's *measured* per-device collective traffic
+(trip-count-corrected, from the compiled train_4k dry-run artifacts in
+experiments/dryrun/) and replays an equivalent one-iteration communication
+load on the paper's 128-GPU CLOS fabric under each CC policy.
+
+Calibration: per-device wire bytes per kind B_k are matched by sizing a
+hierarchical All-Reduce (B_ar) and a direct All-To-All (B_a2a) so each
+GPU's NIC moves the measured number of bytes (DESIGN.md §7.3).
+
+Run after the dry-run sweep:
+  PYTHONPATH=src python examples/predict_all_archs.py
+"""
+import glob
+import json
+import os
+
+from repro.core.cc import get_policy
+from repro.core.collectives import allreduce_2d, alltoall, ScheduleBuilder
+from repro.core.engine import EngineConfig, simulate
+from repro.core.topology import clos
+
+POLICIES = ("pfc", "dcqcn", "dctcp", "timely", "hpcc", "static_window")
+
+
+def arch_comm_profile(rec):
+    coll = rec["collective_bytes"]
+    dev = 1  # bytes are already per-device
+    ar = (coll.get("all-reduce", 0) + coll.get("all-gather", 0)
+          + coll.get("reduce-scatter", 0)) / dev
+    a2a = coll.get("all-to-all", 0) / dev
+    return ar, a2a
+
+
+def build_equiv_schedule(topo, n, ar_bytes_per_gpu, a2a_bytes_per_gpu):
+    """Size collectives so each GPU's NIC moves the measured bytes."""
+    gpus = list(range(n))
+    gpn = topo.meta["gpus_per_node"]
+    n_nodes = n // gpn
+    b = ScheduleBuilder(topo)
+    # hierarchical AR: NIC bytes/GPU = 2*S*(n_nodes-1)/(gpn*n_nodes)
+    if ar_bytes_per_gpu > 0:
+        S_ar = ar_bytes_per_gpu * gpn * n_nodes / (2 * max(n_nodes - 1, 1))
+        sched_ar = allreduce_2d(topo, gpus, S_ar, n_chunks=2)
+    else:
+        sched_ar = None
+    if a2a_bytes_per_gpu > 0:
+        # direct a2a: NIC bytes/GPU ~ S*(n - gpn)/n
+        S_a2a = a2a_bytes_per_gpu * n / max(n - gpn, 1)
+        sched_a2a = alltoall(topo, gpus, S_a2a, n_chunks=2)
+    else:
+        sched_a2a = None
+    return sched_ar, sched_a2a
+
+
+def main():
+    topo = clos(n_racks=4, nodes_per_rack=2, gpus_per_node=8)  # 64 GPUs
+    n = 64
+    cfg = EngineConfig(dt=4e-6, max_steps=4000, max_extends=6)
+    files = sorted(glob.glob("experiments/dryrun/*_train_4k_sp.json"))
+    if not files:
+        print("no dry-run artifacts; run: python -m repro.launch.dryrun --all")
+        return
+    print(f"{'arch':20s} {'AR GB/dev':>10s} {'A2A GB/dev':>10s}  " +
+          " ".join(f"{p:>9s}" for p in POLICIES) + "   (comm time, ms)")
+    for path in files:
+        rec = json.load(open(path))
+        if rec.get("skipped"):
+            continue
+        ar, a2a = arch_comm_profile(rec)
+        # scale one training step's traffic to an ~100 MB/GPU slice so each
+        # fluid sim stays ~4 ms of fabric time (a full step is seconds);
+        # relative CC sensitivity is scale-free for long flows
+        scale = min(1.0, 100e6 / max(ar + a2a, 1.0))
+        sar, sa2a = build_equiv_schedule(topo, n, ar * scale, a2a * scale)
+        times = []
+        for pol in POLICIES:
+            t = 0.0
+            for sched in (sar, sa2a):
+                if sched is None:
+                    continue
+                r = simulate(topo, sched, get_policy(pol), cfg)
+                t += r.completion_time if r.finished else float("nan")
+            times.append(t)
+        base = times[0]
+        print(f"{rec['arch']:20s} {ar/1e9:10.1f} {a2a/1e9:10.1f}  " +
+              " ".join(f"{t*1e3:7.2f}ms" for t in times) +
+              f"   spread {((max(times)-min(times))/base*100):.1f}%")
+
+
+if __name__ == "__main__":
+    main()

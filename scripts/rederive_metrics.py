@@ -1,0 +1,47 @@
+"""Re-derive roofline metrics from stored compiled-HLO artifacts.
+
+The dry-run saves each cell's compiled HLO to experiments/hlo/*.hlo.gz, so
+counter improvements re-derive flops/bytes/collectives WITHOUT recompiling:
+
+  PYTHONPATH=src python scripts/rederive_metrics.py
+"""
+import glob
+import gzip
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.hlo_counter import totals  # noqa: E402
+
+HLO_DIR = "experiments/hlo"
+JSON_DIR = "experiments/dryrun"
+
+
+def main():
+    n = 0
+    for path in sorted(glob.glob(os.path.join(HLO_DIR, "*.hlo.gz"))):
+        tag = os.path.basename(path)[:-len(".hlo.gz")]
+        jpath = os.path.join(JSON_DIR, tag + ".json")
+        if not os.path.exists(jpath):
+            print("no json for", tag)
+            continue
+        with gzip.open(path, "rt") as f:
+            txt = f.read()
+        t = totals(txt)
+        rec = json.load(open(jpath))
+        rec["flops"] = t.flops
+        rec["bytes_accessed"] = t.bytes
+        rec["bytes_floor"] = t.bytes_floor
+        rec["collective_bytes"] = dict(t.coll)
+        with open(jpath, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+        n += 1
+        print(f"rederived {tag}: flops={t.flops:.3e} floor={t.bytes_floor:.3e} "
+              f"coll={t.coll.get('total', 0):.3e}")
+    print(f"done: {n} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Dev driver: one fwd/loss + prefill/decode per smoke arch on CPU."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, smoke_model
+
+ARCH = sys.argv[1] if len(sys.argv) > 1 else None
+
+
+def run(name):
+    m = smoke_model(name)
+    cfg = m.cfg
+    key = jax.random.PRNGKey(0)
+    params = m.init(key)
+    B, S = 2, 32
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab)}
+    if cfg.vlm_prefix_len:
+        batch["img"] = jax.random.normal(key, (B, cfg.vlm_prefix_len, cfg.d_model),
+                                         jnp.bfloat16)
+    if cfg.enc_dec:
+        batch["frames"] = jax.random.normal(key, (B, S, cfg.d_model), jnp.bfloat16)
+    loss = jax.jit(m.loss)(params, batch)
+    assert np.isfinite(float(loss)), (name, loss)
+
+    # prefill + 3 decode steps
+    logits, cache = jax.jit(lambda p, b: m.prefill(p, b, max_len=S + 8))(params, batch)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32))), name
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    step = jax.jit(m.decode_step)
+    for _ in range(3):
+        logits, cache = step(params, cache, tok)
+        assert np.all(np.isfinite(np.asarray(logits, np.float32))), name
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    print(f"OK {name}: loss={float(loss):.4f}")
+
+
+for name in ([ARCH] if ARCH else ARCHS):
+    run(name)

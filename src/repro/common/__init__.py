@@ -1,0 +1,13 @@
+from repro.common.pytree import (  # noqa: F401
+    ParamDef,
+    count_params,
+    flatten_with_paths,
+    materialize,
+    specs_of,
+    tree_bytes,
+)
+from repro.common.sharding import (  # noqa: F401
+    MeshRules,
+    named_sharding,
+    logical_to_pspec,
+)

@@ -1,0 +1,32 @@
+"""Mixed-precision policy: params/compute/accumulation dtypes."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    param_dtype: jnp.dtype = jnp.dtype(jnp.float32)
+    compute_dtype: jnp.dtype = jnp.dtype(jnp.bfloat16)
+    accum_dtype: jnp.dtype = jnp.dtype(jnp.float32)
+    # optimizer master/moment dtype; bf16 for the giant MoE cells (see DESIGN)
+    opt_dtype: jnp.dtype = jnp.dtype(jnp.float32)
+
+    def cast_compute(self, tree):
+        return jax.tree.map(
+            lambda x: x.astype(self.compute_dtype)
+            if hasattr(x, "astype") and jnp.issubdtype(x.dtype, jnp.floating)
+            else x,
+            tree,
+        )
+
+
+BF16_TRAIN = Policy(param_dtype=jnp.dtype(jnp.bfloat16))
+F32_PARAMS = Policy()
+# memory-frugal policy for 100B+ MoE training cells
+BF16_EVERYTHING = Policy(
+    param_dtype=jnp.dtype(jnp.bfloat16), opt_dtype=jnp.dtype(jnp.bfloat16)
+)

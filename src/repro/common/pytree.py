@@ -1,0 +1,124 @@
+"""Declarative parameter trees.
+
+Models declare their parameters once as a pytree of :class:`ParamDef`
+(shape + dtype + init + logical axes).  From that single declaration we
+derive:
+
+* ``materialize(defs, key)``  -> pytree of initialized ``jnp`` arrays
+* ``specs_of(defs, rules)``   -> matching pytree of ``PartitionSpec``
+* ``abstract(defs)``          -> matching pytree of ``ShapeDtypeStruct``
+
+keeping init / sharding / dry-run shapes impossible to diverge.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """A single parameter: shape, dtype, initializer and *logical* axes.
+
+    ``axes`` names one logical axis per dim (or None for unsharded), e.g.
+    ``("vocab", "embed")``.  Mesh mapping happens later via MeshRules.
+    """
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"  # normal | zeros | ones | scaled
+    dtype: Any = jnp.float32
+    scale: float | None = None  # override init scale
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _init_one(d: ParamDef, key: jax.Array) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "normal":
+        scale = d.scale if d.scale is not None else 0.02
+        return (scale * jax.random.normal(key, d.shape)).astype(d.dtype)
+    if d.init == "scaled":  # fan-in scaled (lecun normal)
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        scale = d.scale if d.scale is not None else 1.0
+        return (scale / math.sqrt(max(fan_in, 1)) * jax.random.normal(key, d.shape)).astype(d.dtype)
+    raise ValueError(f"unknown init {d.init}")
+
+
+def materialize(defs, key: jax.Array):
+    """Initialize every ParamDef leaf with a folded-in unique key."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    out = []
+    for i, leaf in enumerate(leaves):
+        if _is_def(leaf):
+            out.append(_init_one(leaf, jax.random.fold_in(key, i)))
+        else:
+            out.append(leaf)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract(defs):
+    """ShapeDtypeStruct tree (used by the dry-run: no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=_is_def
+    )
+
+
+def specs_of(defs, rules: "Any"):
+    """PartitionSpec tree via MeshRules (import-cycle-free duck typing).
+    Shape-aware: non-divisible assignments fall back to replication."""
+    return jax.tree.map(lambda d: rules.pspec(d.axes, d.shape), defs,
+                        is_leaf=_is_def)
+
+
+def count_params(defs_or_params) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(defs_or_params, is_leaf=_is_def):
+        if _is_def(leaf):
+            total += int(np.prod(leaf.shape))
+        elif hasattr(leaf, "shape"):
+            total += int(np.prod(leaf.shape))
+    return total
+
+
+def tree_bytes(defs_or_params) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(defs_or_params, is_leaf=_is_def):
+        if _is_def(leaf):
+            total += int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+        elif hasattr(leaf, "shape"):
+            total += int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def flatten_with_paths(tree, is_leaf: Callable | None = None):
+    """[(dot.path, leaf)] for checkpointing / inspection."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)
+    out = []
+    for path, leaf in flat:
+        name = ".".join(_path_elem(p) for p in path)
+        out.append((name, leaf))
+    return out
+
+
+def _path_elem(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return str(p.name)
+    return str(p)

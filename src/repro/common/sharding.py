@@ -1,0 +1,137 @@
+"""Logical-axis -> mesh-axis sharding rules (GSPMD style).
+
+Logical axes used across the model zoo:
+
+  batch    activations' batch dim          -> ("pod", "data")
+  seq      sequence dim of *caches*        -> "data" (sequence parallelism
+           for long-context decode; activations keep seq unsharded)
+  vocab    embedding / logits vocab dim    -> "model"
+  embed    d_model dim                     -> None (or "data" under FSDP)
+  heads    attention heads                 -> "model"
+  kv_heads KV heads                        -> "model" when divisible
+  mlp      FFN hidden dim                  -> "model"
+  expert   MoE expert dim                  -> "model"  (expert parallelism)
+  layers   scan-stacked layer dim          -> None
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": ("data",),
+    "vocab": ("model",),
+    "embed": None,
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "expert": ("model",),
+    "mla_latent": ("model",),
+    "layers": None,
+    "conv": None,
+    "state": None,
+}
+
+# FSDP variant: additionally shard the d_model dim of weights over "data"
+FSDP_RULES = dict(DEFAULT_RULES, embed=("data",))
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    """Maps logical axis names to mesh axes, restricted to a given mesh.
+
+    When a concrete ``shape`` is provided, assignments that don't divide
+    the dimension are dropped (rightmost mesh axis first) — e.g. kv_heads=4
+    on a model=16 mesh falls back to replication (the standard
+    KV-replication strategy for GQA under wide TP)."""
+
+    rules: tuple[tuple[str, tuple[str, ...] | None], ...]
+    mesh_axes: tuple[str, ...]
+    axis_sizes: tuple[tuple[str, int], ...]
+
+    @classmethod
+    def create(cls, mesh: Mesh, overrides: dict | None = None) -> "MeshRules":
+        rules = dict(DEFAULT_RULES)
+        if overrides:
+            rules.update(overrides)
+        # Drop mesh axes that don't exist on this mesh (e.g. no "pod").
+        clean = {}
+        for k, v in rules.items():
+            if v is None or v == ():
+                clean[k] = None
+            else:
+                kept = tuple(a for a in v if a in mesh.axis_names)
+                clean[k] = kept if kept else None
+        shape = mesh.shape  # dict-like on both Mesh and AbstractMesh
+        sizes = tuple((a, int(shape[a])) for a in mesh.axis_names)
+        return cls(tuple(sorted(clean.items())), tuple(mesh.axis_names), sizes)
+
+    def _lookup(self, logical: str | None):
+        if logical is None:
+            return None
+        for k, v in self.rules:
+            if k == logical:
+                return v
+        return None
+
+    def _size(self, axis: str) -> int:
+        for k, v in self.axis_sizes:
+            if k == axis:
+                return v
+        return 1
+
+    def pspec(self, axes: tuple[str | None, ...],
+              shape: tuple[int, ...] | None = None) -> P:
+        used: set[str] = set()
+        parts = []
+        for i, a in enumerate(axes):
+            m = self._lookup(a)
+            if m is None:
+                parts.append(None)
+                continue
+            kept = tuple(x for x in m if x not in used)
+            if shape is not None:
+                # drop axes (rightmost first) until the dim divides evenly
+                dim = shape[i]
+                while kept and dim % _prod(self._size(x) for x in kept) != 0:
+                    kept = kept[:-1]
+            used.update(kept)
+            if not kept:
+                parts.append(None)
+            elif len(kept) == 1:
+                parts.append(kept[0])
+            else:
+                parts.append(kept)
+        # strip trailing Nones for tidiness
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+
+def _prod(it) -> int:
+    n = 1
+    for x in it:
+        n *= x
+    return n
+
+
+def logical_to_pspec(axes: tuple[str | None, ...], mesh: Mesh,
+                     overrides: dict | None = None) -> P:
+    return MeshRules.create(mesh, overrides).pspec(axes)
+
+
+def named_sharding(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def shard_tree(tree_specs, mesh: Mesh):
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

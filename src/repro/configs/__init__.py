@@ -1,0 +1,65 @@
+"""Architecture registry: ``get_config(name)`` / ``get_model(name, mesh)``.
+
+Every assigned architecture is a selectable config (``--arch <id>``); each
+file records its public source.  ``smoke_config(name)`` returns a reduced
+same-family config for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    MeshConfig,
+    ModelConfig,
+    MULTI_POD,
+    ShapeConfig,
+    SINGLE_POD,
+    TrainConfig,
+)
+
+_MODULES = {
+    "paligemma-3b": "paligemma_3b",
+    "whisper-base": "whisper_base",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "gemma3-27b": "gemma3_27b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "gemma2-9b": "gemma2_9b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "rwkv6-3b": "rwkv6_3b",
+    "dlrm": "dlrm",
+}
+
+ARCHS = tuple(k for k in _MODULES if k != "dlrm")
+
+
+def get_config(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; choose from {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def smoke_config(name: str):
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.smoke()
+
+
+def get_model(name: str, mesh=None):
+    cfg = get_config(name)
+    if name == "dlrm":
+        from repro.models.dlrm import DLRM
+        return DLRM(cfg, mesh)
+    from repro.models.model_api import Model
+    return Model(cfg, mesh)
+
+
+def smoke_model(name: str, mesh=None):
+    cfg = smoke_config(name)
+    if name == "dlrm":
+        from repro.models.dlrm import DLRM
+        return DLRM(cfg, mesh)
+    from repro.models.model_api import Model
+    return Model(cfg, mesh)

@@ -1,0 +1,11 @@
+"""The paper's contribution: workload -> system -> network simulation of
+RoCE congestion control for distributed training (see DESIGN.md)."""
+from repro.core.cc import ALL_POLICIES, get_policy  # noqa: F401
+from repro.core.collectives import (  # noqa: F401
+    allreduce_1d,
+    allreduce_2d,
+    alltoall,
+    incast,
+)
+from repro.core.engine import EngineConfig, Results, Simulator, simulate  # noqa: F401
+from repro.core.topology import clos, single_switch  # noqa: F401

@@ -1,0 +1,64 @@
+"""Differentiable CC parameter tuning (beyond-paper).
+
+The paper: "DCQCN has many parameters that need to be tuned for better
+performance ... tuning the congestion control hyperparameter before
+running every deep learning workload is not a feasible solution."
+
+Because our fluid network layer is pure JAX, the *whole simulation* is
+differentiable w.r.t. the CC policy parameters.  We tune them by gradient
+descent on a soft objective (integral of undelivered traffic fraction +
+PFC pressure), replacing the paper's manual grid search.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cc import Policy
+from repro.core.engine import EngineConfig, Simulator
+
+
+@dataclasses.dataclass
+class TuneResult:
+    params: dict
+    history: list
+    baseline_cost: float
+    tuned_cost: float
+
+
+def autotune(topo, sched, policy: Policy, tune_keys: list[str],
+             steps: int = 12, lr: float = 0.15,
+             cfg: EngineConfig | None = None) -> TuneResult:
+    """Gradient-descent the selected (log-space) params of ``policy``."""
+    cfg = cfg or EngineConfig(dt=2e-6, max_steps=2500, max_extends=0)
+    sim = Simulator(topo, sched, policy, cfg)
+
+    base = dict(policy.params)
+    logp0 = {k: jnp.log(jnp.asarray(float(base[k]), jnp.float32)) for k in tune_keys}
+
+    def cost_fn(logp):
+        params = dict(base)
+        for k, v in logp.items():
+            params[k] = jnp.exp(v)
+        return sim.soft_cost(params)
+
+    vg = jax.jit(jax.value_and_grad(cost_fn))
+    logp = logp0
+    hist = []
+    c0 = float(cost_fn(logp0))
+    best, best_logp = c0, logp0
+    for i in range(steps):
+        c, g = vg(logp)
+        c = float(c)
+        hist.append({"step": i, "cost": c,
+                     **{k: float(jnp.exp(v)) for k, v in logp.items()}})
+        if c < best:
+            best, best_logp = c, logp
+        # normalized gradient step in log space
+        gn = {k: jnp.clip(g[k], -10, 10) for k in g}
+        logp = {k: logp[k] - lr * gn[k] for k in logp}
+    tuned = {k: float(jnp.exp(v)) for k, v in best_logp.items()}
+    return TuneResult(params=dict(base, **tuned), history=hist,
+                      baseline_cost=c0, tuned_cost=best)

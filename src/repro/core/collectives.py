@@ -1,0 +1,177 @@
+"""System layer: collective algorithms -> dependency-tagged flow schedules.
+
+Mirrors ASTRA-Sim's system layer: each collective is decomposed into
+send/recv *messages* (flows); hierarchical algorithms chain stages through
+dependency groups; each collective is split into ``n_chunks`` equal chunks
+processed in a pipeline (paper §III-D: 4 chunks).
+
+A Schedule is plain numpy; the engine consumes it as static arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.topology import MAXHOP, Topology, route
+
+
+@dataclasses.dataclass
+class Schedule:
+    """Flat flow schedule.  All sizes in bytes; times in seconds."""
+    path: np.ndarray          # (F, MAXHOP) int32 link ids, -1 pad
+    n_hops: np.ndarray        # (F,)
+    size: np.ndarray          # (F,) bytes
+    group: np.ndarray         # (F,) completion-group id
+    dep: np.ndarray           # (F,) dep group id or -1
+    delay: np.ndarray         # (F,) start delay after dep completion (s)
+    n_groups: int
+    group_names: list
+
+    @property
+    def n_flows(self) -> int:
+        return len(self.size)
+
+    def total_bytes(self) -> float:
+        return float(self.size.sum())
+
+
+class ScheduleBuilder:
+    def __init__(self, topo: Topology):
+        self.topo = topo
+        self.rows: list = []          # (path, size, group, dep, delay)
+        self.group_names: list = []
+
+    def new_group(self, name: str) -> int:
+        self.group_names.append(name)
+        return len(self.group_names) - 1
+
+    def add_flow(self, src: int, dst: int, size: float, group: int,
+                 dep: int = -1, delay: float = 0.0, ecmp_salt: int = 0):
+        key = (src * 131071 + dst * 8191 + ecmp_salt * 524287 + group) & 0x7FFFFFFF
+        p = route(self.topo, src, dst, key)
+        self.rows.append((p, size, group, dep, delay))
+
+    def add_marker(self, group: int, dep: int = -1, delay: float = 0.0):
+        """Zero-byte flow: pure time/dependency node (compute segments)."""
+        self.rows.append(([-1], 0.0, group, dep, delay))
+
+    def build(self) -> Schedule:
+        F = len(self.rows)
+        path = np.full((F, MAXHOP), -1, np.int32)
+        n_hops = np.zeros(F, np.int32)
+        size = np.zeros(F, np.float64)
+        group = np.zeros(F, np.int32)
+        dep = np.full(F, -1, np.int32)
+        delay = np.zeros(F, np.float64)
+        for i, (p, s, g, d, dl) in enumerate(self.rows):
+            if p != [-1]:
+                path[i, :len(p)] = p
+                n_hops[i] = len(p)
+            size[i] = s
+            group[i] = g
+            dep[i] = d
+            delay[i] = dl
+        return Schedule(path, n_hops, size, group, dep, delay,
+                        n_groups=len(self.group_names),
+                        group_names=self.group_names)
+
+
+# ---------------------------------------------------------------------------
+# collective algorithms
+# ---------------------------------------------------------------------------
+
+def incast(topo: Topology, senders: list, dst: int, size_each: float) -> Schedule:
+    b = ScheduleBuilder(topo)
+    g = b.new_group("incast")
+    for s in senders:
+        b.add_flow(s, dst, size_each, g, ecmp_salt=s)
+    return b.build()
+
+
+def _direct_phase(b: ScheduleBuilder, members, seg_bytes, group, dep, delay,
+                  salt):
+    """Direct (all-to-all-style) phase among ``members``: every member sends
+    its segment to every other member simultaneously."""
+    for i, u in enumerate(members):
+        for j, v in enumerate(members):
+            if u == v:
+                continue
+            b.add_flow(u, v, seg_bytes, group, dep, delay, ecmp_salt=salt + i * 1009 + j)
+
+
+def allreduce_1d(topo: Topology, gpus: list, total_bytes: float,
+                 n_chunks: int = 4) -> Schedule:
+    """Basic direct All-Reduce: RS then AG across all GPUs (paper "1D")."""
+    b = ScheduleBuilder(topo)
+    P = len(gpus)
+    chunk = total_bytes / n_chunks
+    seg = chunk / P
+    for c in range(n_chunks):
+        rs = b.new_group(f"c{c}_rs")
+        dep_rs = -1 if c == 0 else rs - 2   # pipeline: chunk c RS after chunk c-1 RS
+        _direct_phase(b, gpus, seg, rs, dep_rs, 0.0, salt=c * 7919)
+        ag = b.new_group(f"c{c}_ag")
+        _direct_phase(b, gpus, seg, ag, rs, 0.0, salt=c * 7919 + 31)
+    return b.build()
+
+
+def allreduce_2d(topo: Topology, gpus: list, total_bytes: float,
+                 n_chunks: int = 4) -> Schedule:
+    """Hierarchical All-Reduce (paper "2D"): RS within each node over
+    NVLink, RS across same-local-rank GPUs over NICs, then AG in reverse."""
+    b = ScheduleBuilder(topo)
+    gpn = topo.meta.get("gpus_per_node", 8)
+    nodes: dict = {}
+    for g in gpus:
+        nodes.setdefault(g // gpn, []).append(g)
+    node_list = sorted(nodes)
+    n_nodes = len(node_list)
+    P_local = gpn
+    chunk = total_bytes / n_chunks
+    prev_tail = -1
+    for c in range(n_chunks):
+        g1 = b.new_group(f"c{c}_rs_local")
+        dep1 = prev_tail if c > 0 else -1
+        # actually pipeline on the same stage of previous chunk:
+        dep1 = -1 if c == 0 else g1 - 4
+        for node in node_list:
+            _direct_phase(b, nodes[node], chunk / P_local, g1, dep1, 0.0,
+                          salt=c * 7919 + node)
+        g2 = b.new_group(f"c{c}_rs_xnode")
+        for r in range(P_local):  # same local-rank groups across nodes
+            members = [nodes[n][r] for n in node_list]
+            _direct_phase(b, members, chunk / (P_local * n_nodes), g2, g1, 0.0,
+                          salt=c * 7919 + 101 + r)
+        g3 = b.new_group(f"c{c}_ag_xnode")
+        for r in range(P_local):
+            members = [nodes[n][r] for n in node_list]
+            _direct_phase(b, members, chunk / (P_local * n_nodes), g3, g2, 0.0,
+                          salt=c * 7919 + 211 + r)
+        g4 = b.new_group(f"c{c}_ag_local")
+        for node in node_list:
+            _direct_phase(b, nodes[node], chunk / P_local, g4, g3, 0.0,
+                          salt=c * 7919 + 307 + node)
+        prev_tail = g1
+    return b.build()
+
+
+def alltoall(topo: Topology, gpus: list, total_bytes: float,
+             n_chunks: int = 4) -> Schedule:
+    """Direct All-To-All: each GPU sends size/P to every other GPU."""
+    b = ScheduleBuilder(topo)
+    P = len(gpus)
+    chunk = total_bytes / n_chunks
+    per_pair = chunk / P
+    for c in range(n_chunks):
+        g = b.new_group(f"c{c}_a2a")
+        dep = -1 if c == 0 else g - 1
+        _direct_phase(b, gpus, per_pair, g, dep, 0.0, salt=c * 104729)
+    return b.build()
+
+
+def collective_bytes_on_nics(sched: Schedule, topo: Topology) -> float:
+    """Bytes crossing scale-out NICs (for 1D-vs-2D traffic checks)."""
+    nic = set(int(x) for x in topo.up_link)
+    on = np.isin(sched.path, list(nic)).any(axis=1)
+    return float((sched.size * on).sum())

@@ -1,0 +1,328 @@
+"""Network layer: fixed-timestep, fully-vectorized fluid-flow simulator.
+
+JAX/TPU-native adaptation of the paper's NS3 packet-level layer (DESIGN.md
+§2): per-flow/per-link flat arrays stepped inside one ``lax.scan``.
+
+Per step Δt:
+  1. delayed signals (ECN fraction, RTT, HPCC INT utilisation) read from a
+     per-link history ring at t - base_rtt(flow)
+  2. CC policy update -> per-flow rate / window
+  3. paced, window-gated injection into the source NIC egress queue
+  4. hop-ordered fluid forwarding with per-link capacity accounting and
+     proportional backlog drain (per-flow per-hop backlog => exact byte
+     conservation)
+  5. PFC: per-switch buffer hysteresis (X_OFF/X_ON) pauses all upstream
+     links into that switch; pause transitions are counted (Fig 9 metric)
+  6. dependency groups: flows start when their dep group completes (+ a
+     compute delay), giving chunk pipelining and workload DAGs
+
+The engine is differentiable w.r.t. CC policy parameters: `soft_cost`
+integrates the undelivered fraction over time (see core/autotune.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.cc import Policy
+from repro.core.collectives import Schedule
+from repro.core.topology import MAXHOP, Topology
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    dt: float = 1e-6
+    max_steps: int = 20_000
+    max_extends: int = 4          # re-run segments until all flows finish
+    hist: int = 512               # feedback delay ring (steps)
+    # ECN / RED marking at switch egress queues
+    kmin: float = 400e3
+    kmax: float = 1600e3
+    pmax: float = 0.2
+    # PFC per-ingress-port hysteresis (bytes queued in the switch that
+    # arrived through that port; pause is sent to that port's sender only)
+    xoff: float = 1e6
+    xon: float = 0.8e6
+    t_base_util: float = 10e-6    # HPCC qlen->util horizon
+    eps_done: float = 512.0       # completion slack (bytes)
+    pause_resend: float = 5e-6    # PAUSE frame refresh while a port is paused
+
+
+@dataclasses.dataclass
+class Results:
+    finished: bool
+    completion_time: float        # max flow finish (s)
+    t_finish: np.ndarray          # (F,)
+    group_time: np.ndarray        # (G,)
+    group_names: list
+    pause_count: np.ndarray       # (D,) PFC pause transitions per device
+    dev_queue: np.ndarray         # (T, D) per-device queue bytes timeline
+    dt: float
+    delivered: np.ndarray
+    soft_cost: float
+    meta: dict
+
+
+def _prep(topo: Topology, sched: Schedule, cfg: EngineConfig):
+    Lk = topo.n_links
+    path = np.where(sched.path < 0, Lk, sched.path).astype(np.int32)
+    cap = np.concatenate([topo.cap, [1e18]]).astype(np.float32)
+    lat = np.concatenate([topo.lat, [0.0]]).astype(np.float32)
+    ecn_on = np.concatenate([topo.ecn_on, [False]])
+    dst_dev = np.concatenate([topo.dst_dev, [topo.n_devices]]).astype(np.int32)
+
+    # ingress map: backlog at hop h arrived via link path[:, h-1] (h >= 1);
+    # hop-0 backlog is the host's own send queue (never paused by PFC)
+    ingress = np.full_like(path, Lk)
+    ingress[:, 1:] = np.where(sched.path[:, 1:] >= 0, path[:, :-1], Lk)
+    # a port can be paused only if its receiver is a PFC-capable switch
+    dev_sw_ext = np.concatenate([topo.dev_is_switch, [False]])
+    fabric_ext = np.concatenate([topo.fabric, [False]])
+    can_pause = dev_sw_ext[dst_dev] & fabric_ext
+
+    # static fan-in: CONCURRENT flows sharing each flow's most-contended
+    # link.  Deterministic schedules serialize phases via dep groups, so
+    # only same-group flows contend — exactly the knowledge the paper says
+    # an optimized CC should exploit (§IV-E).
+    link_load = np.zeros(Lk + 1, np.float64)
+    for g in range(max(sched.n_groups, 1)):
+        in_g = (sched.group == g) & (sched.size > 0)
+        if not in_g.any():
+            continue
+        load_g = np.zeros(Lk + 1, np.float64)
+        for h in range(path.shape[1]):
+            np.add.at(load_g, path[in_g, h], 1.0)
+        link_load = np.maximum(link_load, load_g)
+    link_load[Lk] = 1.0
+    fanin = np.ones(sched.n_flows, np.float64)
+    for h in range(path.shape[1]):
+        valid = sched.path[:, h] >= 0
+        fanin = np.maximum(fanin, np.where(valid, link_load[path[:, h]], 1.0))
+
+    hopmask = (sched.path >= 0)
+    base_rtt = 2.0 * (lat[path] * hopmask).sum(1)
+    # serialization/propagation floor so zero-latency markers behave
+    base_rtt = np.maximum(base_rtt, 1e-7).astype(np.float32)
+    delay_steps = np.clip(np.round(base_rtt / cfg.dt), 1, cfg.hist - 1).astype(np.int32)
+    first = path[:, 0]
+    line = cap[first].astype(np.float32)
+    bdp = (line * base_rtt).astype(np.float32)
+    gsize = np.zeros(sched.n_groups, np.float32)
+    np.add.at(gsize, sched.group, 1.0)
+    return dict(
+        path=jnp.asarray(path), cap=jnp.asarray(cap),
+        ecn_on=jnp.asarray(ecn_on), dst_dev=jnp.asarray(dst_dev),
+        ingress=jnp.asarray(ingress), can_pause=jnp.asarray(can_pause),
+        hopmask=jnp.asarray(hopmask),
+        n_hops=jnp.asarray(sched.n_hops),
+        base_rtt=jnp.asarray(base_rtt), delay_steps=jnp.asarray(delay_steps),
+        line=jnp.asarray(line), bdp=jnp.asarray(bdp),
+        fanin=jnp.asarray(fanin.astype(np.float32)),
+        size=jnp.asarray(sched.size.astype(np.float32)),
+        group=jnp.asarray(sched.group), dep=jnp.asarray(sched.dep),
+        sdelay=jnp.asarray(sched.delay.astype(np.float32)),
+        gsize=jnp.asarray(gsize),
+        src_dev=jnp.asarray(topo.src_dev),
+        dev_is_switch=jnp.asarray(topo.dev_is_switch),
+        dev_buf=jnp.asarray(topo.dev_buf.astype(np.float32)),
+        n_links=Lk, n_dev=topo.n_devices, n_groups=sched.n_groups,
+        n_flows=sched.n_flows,
+    )
+
+
+def _policy_init(policy: Policy, F: int, pp: dict):
+    try:  # schedule-aware policies (StaticWindow) take the fan-in too
+        return policy.init(F, pp["line"], pp["bdp"], fanin=pp["fanin"])
+    except TypeError:
+        return policy.init(F, pp["line"], pp["bdp"])
+
+
+def _init_carry(pp, policy: Policy, cfg: EngineConfig):
+    F, Lk, D, G = pp["n_flows"], pp["n_links"], pp["n_dev"], pp["n_groups"]
+    return dict(
+        backlog=jnp.zeros((F, MAXHOP), jnp.float32),
+        remaining=pp["size"] * policy.wire_factor,
+        injected=jnp.zeros(F, jnp.float32),
+        delivered=jnp.zeros(F, jnp.float32),
+        done=jnp.zeros(F, bool),
+        t_finish=jnp.full(F, jnp.inf, jnp.float32),
+        g_count=jnp.zeros(G, jnp.float32),
+        # empty groups (possible after topology mapping) complete at t=0
+        g_time=jnp.where(pp["gsize"] < 0.5, 0.0, jnp.inf).astype(jnp.float32),
+        paused=jnp.zeros(Lk + 1, bool),
+        pause_count=jnp.zeros(D, jnp.float32),
+        hist_q=jnp.zeros((cfg.hist, Lk + 1), jnp.float32),
+        hist_tx=jnp.zeros((cfg.hist, Lk + 1), jnp.float32),
+        cc=_policy_init(policy, F, pp),
+        soft=jnp.zeros((), jnp.float32),
+    )
+
+
+def _make_step(pp, policy: Policy, cfg: EngineConfig, cc_params):
+    F, Lk, D, G = pp["n_flows"], pp["n_links"], pp["n_dev"], pp["n_groups"]
+    dt = cfg.dt
+    path, cap = pp["path"], pp["cap"]
+    hopmask = pp["hopmask"]
+    wire = jnp.float32(policy.wire_factor)
+
+    def step(carry, it):
+        t = it.astype(jnp.float32) * dt
+        # ---- 1. delayed signals ------------------------------------------
+        idx = jnp.maximum(it - pp["delay_steps"], 0) % cfg.hist
+        q_d = carry["hist_q"][idx[:, None], path]        # (F, MAXHOP)
+        tx_d = carry["hist_tx"][idx[:, None], path]
+        caps = cap[path]
+        rtt = pp["base_rtt"] + (q_d / caps * hopmask).sum(1)
+        mark = jnp.clip((q_d - cfg.kmin) / (cfg.kmax - cfg.kmin), 0.0, 1.0) * cfg.pmax
+        mark = mark * pp["ecn_on"][path] * hopmask
+        ecn = 1.0 - jnp.prod(1.0 - mark, axis=1)
+        util_l = tx_d / caps + q_d / (caps * cfg.t_base_util)
+        util = jnp.max(jnp.where(hopmask, util_l, 0.0), axis=1)
+        sig = {"ecn": ecn, "rtt": rtt, "util": util, "t": t, "dt": dt,
+               "line": pp["line"], "base_rtt": pp["base_rtt"]}
+
+        # ---- 2. CC update -------------------------------------------------
+        cc, rate, win = policy.update(cc_params, carry["cc"], sig)
+
+        # ---- 3. injection --------------------------------------------------
+        dep = pp["dep"]
+        g_done = carry["g_count"] >= pp["gsize"] - 0.5
+        dep_ok = jnp.where(dep >= 0, g_done[jnp.maximum(dep, 0)], True)
+        dep_t = jnp.where(dep >= 0, carry["g_time"][jnp.maximum(dep, 0)], 0.0)
+        started = dep_ok & (t >= dep_t + pp["sdelay"])
+        inflight = carry["injected"] - carry["delivered"]
+        room = jnp.maximum(win - inflight, 0.0)
+        inj = jnp.minimum(jnp.minimum(rate * dt, room), carry["remaining"])
+        inj = jnp.where(started & (pp["n_hops"] > 0), jnp.maximum(inj, 0.0), 0.0)
+        backlog = carry["backlog"].at[:, 0].add(inj)
+        remaining = carry["remaining"] - inj
+        injected = carry["injected"] + inj
+
+        # ---- 4. PFC gates (per-port) ---------------------------------------
+        gate = ~carry["paused"]
+        rem_cap = cap * dt * gate
+        rem_cap = rem_cap.at[Lk].set(1e18)
+
+        # ---- 5. hop-ordered forwarding -------------------------------------
+        delivered = carry["delivered"]
+        tx_bytes = jnp.zeros(Lk + 1, jnp.float32)
+        for h in range(MAXHOP):
+            lid = path[:, h]
+            dem = jnp.zeros(Lk + 1, jnp.float32).at[lid].add(backlog[:, h])
+            frac = jnp.where(dem > 0, jnp.minimum(1.0, rem_cap / jnp.maximum(dem, 1e-9)), 0.0)
+            moved = backlog[:, h] * frac[lid]
+            backlog = backlog.at[:, h].add(-moved)
+            last = pp["n_hops"] == (h + 1)
+            delivered = delivered + jnp.where(last, moved, 0.0)
+            if h + 1 < MAXHOP:
+                backlog = backlog.at[:, h + 1].add(jnp.where(last, 0.0, moved))
+            movedsum = jnp.zeros(Lk + 1, jnp.float32).at[lid].add(moved)
+            rem_cap = jnp.maximum(rem_cap - movedsum, 0.0)
+            tx_bytes = tx_bytes + movedsum
+
+        # ---- 6. queues ------------------------------------------------------
+        q_link = jnp.zeros(Lk + 1, jnp.float32).at[path.reshape(-1)].add(
+            backlog.reshape(-1))
+        q_dev = jnp.zeros(D, jnp.float32).at[pp["src_dev"]].add(q_link[:Lk])
+        # per-ingress-port occupancy at the receiving switch
+        q_port = jnp.zeros(Lk + 1, jnp.float32).at[pp["ingress"].reshape(-1)].add(
+            backlog.reshape(-1))
+
+        # ---- 7. PFC per-port hysteresis --------------------------------------
+        over = (q_port > cfg.xoff) & pp["can_pause"]
+        under = q_port < cfg.xon
+        paused = jnp.where(over, True, jnp.where(under, False, carry["paused"]))
+        # PAUSE frames: one on the off-transition + periodic refreshes while
+        # the port stays paused (how NS3 counts them)
+        frames = ((paused & ~carry["paused"])[:Lk].astype(jnp.float32)
+                  + paused[:Lk].astype(jnp.float32) * (dt / cfg.pause_resend))
+        pause_count = carry["pause_count"].at[pp["dst_dev"][:Lk]].add(frames)
+
+        # ---- 8. completion --------------------------------------------------
+        wire_size = pp["size"] * wire
+        data_done = delivered >= wire_size - cfg.eps_done
+        marker_done = (pp["n_hops"] == 0) & started
+        newly = ~carry["done"] & (jnp.where(pp["n_hops"] > 0, data_done, marker_done))
+        done = carry["done"] | newly
+        # completion happens at the END of this step's transfer window
+        t_finish = jnp.where(newly, t + dt, carry["t_finish"])
+        g_count = carry["g_count"].at[pp["group"]].add(newly.astype(jnp.float32))
+        g_done_new = (g_count >= pp["gsize"] - 0.5) & ~(carry["g_count"] >= pp["gsize"] - 0.5)
+        g_time = jnp.where(g_done_new, t + dt, carry["g_time"])
+
+        # ---- 9. history + soft cost ----------------------------------------
+        hist_q = lax.dynamic_update_slice_in_dim(
+            carry["hist_q"], q_link[None], it % cfg.hist, axis=0)
+        hist_tx = lax.dynamic_update_slice_in_dim(
+            carry["hist_tx"], (tx_bytes / dt)[None], it % cfg.hist, axis=0)
+        undeliv = jnp.sum(wire_size - jnp.minimum(delivered, wire_size))
+        soft = carry["soft"] + dt * undeliv / jnp.maximum(jnp.sum(wire_size), 1.0)
+
+        new_carry = dict(
+            backlog=backlog, remaining=remaining, injected=injected,
+            delivered=delivered, done=done, t_finish=t_finish,
+            g_count=g_count, g_time=g_time, paused=paused,
+            pause_count=pause_count, hist_q=hist_q, hist_tx=hist_tx,
+            cc=cc, soft=soft)
+        return new_carry, q_dev
+
+    return step
+
+
+class Simulator:
+    """Compiled fluid simulation of one (topology, schedule, policy)."""
+
+    def __init__(self, topo: Topology, sched: Schedule, policy: Policy,
+                 cfg: EngineConfig = EngineConfig()):
+        self.topo, self.sched, self.policy, self.cfg = topo, sched, policy, cfg
+        self.pp = _prep(topo, sched, cfg)
+
+        def segment(carry, it0, cc_params):
+            step = _make_step(self.pp, policy, cfg, cc_params)
+            its = it0 + jnp.arange(cfg.max_steps)
+            return lax.scan(step, carry, its)
+
+        self._segment = jax.jit(segment)
+
+    def run(self, cc_params: dict | None = None) -> Results:
+        cfg = self.cfg
+        params = cc_params if cc_params is not None else self.policy.params
+        carry = _init_carry(self.pp, self.policy, cfg)
+        qs = []
+        for k in range(cfg.max_extends + 1):
+            carry, q_dev = self._segment(carry, jnp.asarray(k * cfg.max_steps), params)
+            qs.append(np.asarray(q_dev))
+            if bool(np.asarray(carry["done"]).all()):
+                break
+        dev_queue = np.concatenate(qs, axis=0)
+        t_fin = np.asarray(carry["t_finish"])
+        finished = bool(np.asarray(carry["done"]).all())
+        return Results(
+            finished=finished,
+            completion_time=float(np.max(np.where(np.isfinite(t_fin), t_fin, 0.0))),
+            t_finish=t_fin,
+            group_time=np.asarray(carry["g_time"]),
+            group_names=self.sched.group_names,
+            pause_count=np.asarray(carry["pause_count"]),
+            dev_queue=dev_queue,
+            dt=cfg.dt,
+            delivered=np.asarray(carry["delivered"]),
+            soft_cost=float(carry["soft"]),
+            meta={"policy": self.policy.name, "topo": self.topo.name,
+                  "n_flows": self.sched.n_flows},
+        )
+
+    def soft_cost(self, cc_params) -> jnp.ndarray:
+        """Differentiable objective: integral of undelivered fraction."""
+        carry = _init_carry(self.pp, self.policy, self.cfg)
+        carry, _ = self._segment(carry, jnp.asarray(0), cc_params)
+        return carry["soft"]
+
+
+def simulate(topo, sched, policy, cfg: EngineConfig = EngineConfig()) -> Results:
+    return Simulator(topo, sched, policy, cfg).run()

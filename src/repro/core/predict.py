@@ -1,0 +1,83 @@
+"""End-to-end bridge: (architecture x mesh) collective schedule -> CLOS
+fluid simulation under each CC policy.
+
+Generalizes the paper's DLRM study to every assigned architecture: the
+collective mix is extracted from the compiled dry-run HLO (hlo_comm), the
+mesh axes are mapped onto the paper's CLOS fabric, and one training
+iteration's communication is simulated under each CC policy.
+
+Mesh->fabric mapping: mesh devices are laid out row-major (pod, data,
+model); chips are packed 8 per node.  A "model"-axis collective therefore
+spans consecutive chips (mostly intra-node NVLink + intra-rack NICs) while
+"data"/"pod"-axis collectives stride across nodes and racks — the same
+locality structure Mudigere et al. describe for production DLRM platforms.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import cc as cc_mod
+from repro.core.collectives import ScheduleBuilder, _direct_phase
+from repro.core.engine import EngineConfig, simulate
+from repro.core.hlo_comm import CollectiveOp
+from repro.core.topology import Topology, clos
+
+
+@dataclasses.dataclass
+class PredictReport:
+    policy: str
+    comm_time: float
+    pauses: float
+    finished: bool
+
+
+def mesh_groups(mesh_shape: tuple[int, ...], axis: int, n_gpus: int) -> list[list[int]]:
+    """Device groups for a collective over ``axis`` of the mesh, mapped to
+    GPU ids (device i -> gpu i % n_gpus when the mesh is larger than the
+    modeled fabric slice)."""
+    n = int(np.prod(mesh_shape))
+    ids = np.arange(n).reshape(mesh_shape)
+    moved = np.moveaxis(ids, axis, -1).reshape(-1, mesh_shape[axis])
+    return [[int(g) % n_gpus for g in row] for row in moved]
+
+
+def schedule_from_ops(topo: Topology, ops: list[CollectiveOp],
+                      mesh_shape: tuple[int, ...],
+                      axis_of_op: list[int], n_chunks: int = 4):
+    """Build a flow schedule replaying `ops` (op k over mesh axis
+    axis_of_op[k]), chunked and chained like the workload layer does."""
+    b = ScheduleBuilder(topo)
+    prev = -1
+    for k, op in enumerate(ops):
+        groups = mesh_groups(mesh_shape, axis_of_op[k], topo.n_gpus)
+        per_group_bytes = op.bytes_total * op.count / max(len(groups), 1)
+        factor = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                  "all-to-all": 1.0, "collective-permute": 1.0}[op.kind]
+        for c in range(n_chunks):
+            g = b.new_group(f"op{k}_c{c}")
+            for gi, members in enumerate(groups):
+                m = sorted(set(members))
+                if len(m) < 2:
+                    continue
+                P = len(m)
+                pair_bytes = per_group_bytes * factor / n_chunks / P
+                _direct_phase(b, m, pair_bytes, g, prev, 0.0,
+                              salt=k * 65537 + c * 104729 + gi)
+            prev = g
+    return b.build()
+
+
+def predict_policies(ops, mesh_shape, axis_of_op, policies=None,
+                     topo: Topology | None = None,
+                     cfg: EngineConfig | None = None) -> list[PredictReport]:
+    topo = topo or clos(n_racks=2, nodes_per_rack=2, gpus_per_node=8)
+    cfg = cfg or EngineConfig(dt=2e-6, max_steps=4000, max_extends=6)
+    sched = schedule_from_ops(topo, ops, mesh_shape, axis_of_op)
+    out = []
+    for name in (policies or cc_mod.ALL_POLICIES):
+        res = simulate(topo, sched, cc_mod.get_policy(name), cfg)
+        out.append(PredictReport(name, res.completion_time,
+                                 float(res.pause_count.sum()), res.finished))
+    return out

@@ -1,0 +1,6 @@
+# TPU Pallas kernels for the compute hot-spots of this system:
+#   embedding_bag — DLRM multi-hot pooled lookup (the paper's workload)
+#   flash_decode  — chunked-KV decode attention (serving shape cells)
+#   cc_update     — fused DCQCN per-flow state update (the simulator's
+#                   inner loop when sweeping CC configs on-TPU)
+# Each has ops.py (jit wrapper) + ref.py (pure-jnp oracle) + allclose tests.

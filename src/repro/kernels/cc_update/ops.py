@@ -1,0 +1,30 @@
+"""Wrapper: flat per-flow DCQCN state -> tiled Pallas update -> flat."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cc_update.cc_update import dcqcn_update_tiled
+
+ORDER = ("rc", "rt", "alpha", "t_cut", "t_inc", "t_alpha", "inc_count", "jit")
+
+
+def _tile(x, n_pad):
+    return jnp.pad(x, (0, n_pad)).reshape(-1, 128)
+
+
+def dcqcn_update(state: dict, ecn: jax.Array, line: jax.Array, t,
+                 params: dict, interpret: bool = True) -> dict:
+    """state: dict of (F,) float32 (cc.make_dcqcn layout).  Returns the
+    updated dict (rate == updated rc)."""
+    F = ecn.shape[0]
+    n_pad = (-F) % 128
+    tiles = tuple(_tile(state[k].astype(jnp.float32), n_pad) for k in ORDER)
+    ecn2d = _tile(ecn.astype(jnp.float32), n_pad)
+    line2d = _tile(line.astype(jnp.float32), n_pad)
+    pk = tuple(sorted({**params}.items()))
+    outs = dcqcn_update_tiled(tiles, ecn2d, line2d, jnp.asarray(t, jnp.float32),
+                              pk, interpret=interpret)
+    new = {k: o.reshape(-1)[:F] for k, o in zip(ORDER[:7], outs)}
+    new["jit"] = state["jit"]
+    return new

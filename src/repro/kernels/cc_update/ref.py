@@ -1,0 +1,24 @@
+"""Oracle: the DCQCN update from repro.core.cc applied to tiled state."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.cc import make_dcqcn
+
+
+def dcqcn_update_tiled_ref(state2d, ecn2d, line2d, t, params):
+    pk = dict(params)
+    pol = make_dcqcn(g=pk["g"], rai_frac=pk["rai_frac"], rhai_frac=pk["rhai_frac"],
+                     timer=pk["timer"], cut_gap=pk["cut_gap"],
+                     fast_rounds=int(pk["fast_rounds"]), hai_after=int(pk["hai_after"]),
+                     ecn_thresh=pk["ecn_thresh"], mss=pk["mss"])
+    rc, rt, alpha, t_cut, t_inc, t_alpha, cnt, jit = [a.reshape(-1) for a in state2d]
+    st = {"rc": rc, "rt": rt, "alpha": alpha, "jit": jit, "t_cut": t_cut,
+          "t_inc": t_inc, "t_alpha": t_alpha, "inc_count": cnt}
+    sig = {"ecn": ecn2d.reshape(-1), "rtt": jnp.zeros_like(rc),
+           "util": jnp.zeros_like(rc), "t": t, "dt": 1e-6,
+           "line": line2d.reshape(-1), "base_rtt": jnp.zeros_like(rc)}
+    st2, rate, _ = pol.update(pol.params, st, sig)
+    shape = state2d[0].shape
+    order = ("rc", "rt", "alpha", "t_cut", "t_inc", "t_alpha", "inc_count")
+    return tuple(st2[k].reshape(shape) for k in order)

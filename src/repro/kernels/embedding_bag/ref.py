@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the embedding-bag kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_rows_ref(table2d: jax.Array, rows: jax.Array) -> jax.Array:
+    """(R, Dp), (NB, P) -> (NB, Dp) float32 sum-pool."""
+    gathered = table2d[rows]              # (NB, P, Dp)
+    return gathered.astype(jnp.float32).sum(axis=1)
+
+
+def embedding_bag_stacked_ref(tables: jax.Array, idx: jax.Array) -> jax.Array:
+    """tables (T, R, D), idx (B, T, P) -> (B, T, D) in tables.dtype."""
+    def per_table(tab, ix):
+        return tab[ix].astype(jnp.float32).sum(axis=1)
+    pooled = jax.vmap(per_table, in_axes=(0, 1), out_axes=1)(tables, idx)
+    return pooled.astype(tables.dtype)

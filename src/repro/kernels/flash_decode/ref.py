@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for flash_decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_decode_ref(q, k, v, length):
+    """q: (B,Hkv,G,D); k/v: (B,S,Hkv,D); length (B,) -> (B,Hkv,G,D)."""
+    B, Hkv, G, D = q.shape
+    S = k.shape[1]
+    logits = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (D ** 0.5)
+    mask = jnp.arange(S)[None, None, None, :] < length[:, None, None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

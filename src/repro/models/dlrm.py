@@ -1,0 +1,157 @@
+"""DLRM (Naumov et al., arXiv:1906.00091) with the paper's Table II sizes.
+
+bottom-MLP(dense 1600 -> 1024 x (5+2) -> 64)  ||  64 embedding tables
+(dim 64, pooling factor 60, model-parallel over "model")  ->  pairwise dot
+interaction -> top-MLP(2048 x (10+2) -> 1) -> CTR logit.
+
+The embedding tables are sharded over the "model" axis (model parallelism);
+their per-sample pooled outputs must be exchanged to every data shard —
+under pjit this resharding lowers to the All-To-All / All-Gather traffic
+the paper studies, and `kernels/embedding_bag` provides the TPU hot-spot
+kernel for the multi-hot pooled lookup.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import ParamDef, materialize, specs_of
+from repro.common.sharding import MeshRules
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm"
+    family: str = "recsys"
+    n_dense: int = 1600           # dense features (paper Table II)
+    n_tables: int = 64            # sparse features
+    emb_dim: int = 64             # embedding dimension
+    pooling: int = 60             # multi-hot lookups per table per sample
+    rows_per_table: int = 1_000_000
+    bot_mlp: tuple[int, ...] = (1024,) * 7    # 5+2 layers @ 1024
+    top_mlp: tuple[int, ...] = (2048,) * 12   # 10+2 layers @ 2048
+    emb_dtype: str = "bfloat16"   # 16-bit embedding data (paper)
+    param_dtype: str = "float32"
+    opt_dtype: str = "float32"
+    use_pallas_embedding: bool = False
+
+
+def _mlp_defs(sizes, d_in, d_out, pd):
+    defs = {}
+    prev = d_in
+    for i, h in enumerate(sizes):
+        defs[f"w{i}"] = ParamDef((prev, h), ("embed", "mlp"), init="scaled", dtype=pd)
+        defs[f"b{i}"] = ParamDef((h,), ("mlp",), init="zeros", dtype=pd)
+        prev = h
+    defs["w_out"] = ParamDef((prev, d_out), ("mlp", "embed"), init="scaled", dtype=pd)
+    defs["b_out"] = ParamDef((d_out,), ("embed",), init="zeros", dtype=pd)
+    return defs
+
+
+def _mlp_apply(p, x, n_hidden):
+    for i in range(n_hidden):
+        x = jax.nn.relu(x @ p[f"w{i}"].astype(x.dtype) + p[f"b{i}"].astype(x.dtype))
+    return x @ p["w_out"].astype(x.dtype) + p["b_out"].astype(x.dtype)
+
+
+class DLRM:
+    def __init__(self, cfg: DLRMConfig, mesh=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.compute_dtype = jnp.bfloat16
+
+    def param_defs(self):
+        cfg = self.cfg
+        pd = jnp.dtype(cfg.param_dtype)
+        ed = jnp.dtype(cfg.emb_dtype)
+        n_int = cfg.n_tables + 1   # tables + bottom-mlp output
+        d_interact = n_int * (n_int - 1) // 2 + cfg.emb_dim
+        return {
+            # tables stacked: (T, rows, dim), sharded over "model" on T
+            "tables": ParamDef((cfg.n_tables, cfg.rows_per_table, cfg.emb_dim),
+                               ("expert", None, None), init="normal", dtype=ed),
+            "bot": _mlp_defs(cfg.bot_mlp, cfg.n_dense, cfg.emb_dim, pd),
+            "top": _mlp_defs(cfg.top_mlp, d_interact, 1, pd),
+        }
+
+    def init(self, key):
+        return materialize(self.param_defs(), key)
+
+    def param_specs(self, rules: MeshRules | None = None):
+        rules = rules or MeshRules.create(self.mesh)
+        return specs_of(self.param_defs(), rules)
+
+    def _embed_bags(self, tables, idx):
+        """idx: (B, T, pooling) int32 -> pooled (B, T, dim).
+
+        Pure-jnp path (oracle); kernels/embedding_bag provides the Pallas
+        TPU version, selected via cfg.use_pallas_embedding.
+        """
+        if self.cfg.use_pallas_embedding:
+            from repro.kernels.embedding_bag.ops import embedding_bag_stacked
+            return embedding_bag_stacked(tables, idx)
+
+        def per_table(tab, ix):  # tab (rows, dim), ix (B, P)
+            return tab[ix].sum(axis=1)  # (B, dim)
+        pooled = jax.vmap(per_table, in_axes=(0, 1), out_axes=1)(
+            tables.astype(self.compute_dtype), idx)  # (B, T, dim)
+        return pooled
+
+    def forward(self, params, batch):
+        """batch: dense (B, n_dense) f32, sparse_idx (B, T, pooling) i32."""
+        cfg = self.cfg
+        dense = batch["dense"].astype(self.compute_dtype)
+        z_bot = _mlp_apply(params["bot"], dense, len(cfg.bot_mlp))  # (B, dim)
+        pooled = self._embed_bags(params["tables"], batch["sparse_idx"])  # (B,T,dim)
+        feats = jnp.concatenate([z_bot[:, None], pooled], axis=1)  # (B, T+1, dim)
+        inter = jnp.einsum("bid,bjd->bij", feats, feats,
+                           preferred_element_type=jnp.float32)
+        iu = jnp.triu_indices(feats.shape[1], k=1)
+        flat = inter[:, iu[0], iu[1]].astype(self.compute_dtype)  # (B, n(n-1)/2)
+        x = jnp.concatenate([flat, z_bot], axis=-1)
+        return _mlp_apply(params["top"], x, len(cfg.top_mlp))[:, 0]  # (B,)
+
+    def loss(self, params, batch):
+        logit = self.forward(params, batch).astype(jnp.float32)
+        y = batch["label"].astype(jnp.float32)
+        return jnp.mean(jnp.maximum(logit, 0) - logit * y +
+                        jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+    def input_specs(self, global_batch: int):
+        cfg = self.cfg
+        return {
+            "dense": jax.ShapeDtypeStruct((global_batch, cfg.n_dense), jnp.float32),
+            "sparse_idx": jax.ShapeDtypeStruct((global_batch, cfg.n_tables, cfg.pooling),
+                                               jnp.int32),
+            "label": jax.ShapeDtypeStruct((global_batch,), jnp.float32),
+        }
+
+    def batch_pspecs(self, rules: MeshRules | None = None):
+        from jax.sharding import PartitionSpec as P
+        rules = rules or MeshRules.create(self.mesh)
+        bt = rules.pspec(("batch",))
+        b = bt[0] if len(bt) else None
+        return {"dense": P(b, None), "sparse_idx": P(b, None, None), "label": P(b)}
+
+    # --- the paper's communication profile (Fig 10): bytes per iteration ---
+    def comm_profile(self) -> dict:
+        """All-Reduce bytes (DP MLP grads) + All-To-All bytes (embedding)."""
+        cfg = self.cfg
+        mlp_params = 0
+        prev = cfg.n_dense
+        for h in cfg.bot_mlp:
+            mlp_params += prev * h + h
+            prev = h
+        mlp_params += prev * cfg.emb_dim + cfg.emb_dim
+        n_int = cfg.n_tables + 1
+        prev = n_int * (n_int - 1) // 2 + cfg.emb_dim
+        for h in cfg.top_mlp:
+            mlp_params += prev * h + h
+            prev = h
+        mlp_params += prev + 1
+        return {
+            "allreduce_bytes": mlp_params * 2,  # bf16 grads
+            "alltoall_bytes": 8 * 2 ** 20,      # paper: 8 MB per iteration
+        }

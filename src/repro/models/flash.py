@@ -1,0 +1,139 @@
+"""Memory-efficient causal attention with a flash-style custom VJP.
+
+The pure-JAX blockwise attention (layers.blockwise_attention) lets JAX's
+autodiff save the per-block probabilities for the backward pass — the
+roofline instrument measures ~0.5 MB/token/layer of HBM traffic for those
+stacked (block_q x block_k) tensors, which dominates the train-cell memory
+term (EXPERIMENTS.md §Perf).
+
+This version stores only (out, m, l) per row — the softmax statistics —
+and *recomputes* probabilities blockwise inside the custom backward
+(Dao et al., FlashAttention backward), trading ~30% extra attention FLOPs
+(compute term is far from dominant) for eliminating the S^2 residual
+traffic.  Enabled per-config via ModelConfig.flash_attention.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def _mask(qi, ki, bq, bk, causal):
+    qpos = qi * bq + jnp.arange(bq)
+    kpos = ki * bk + jnp.arange(bk)
+    if causal:
+        return kpos[None, :] <= qpos[:, None]
+    return jnp.ones((bq, bk), bool)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 512,
+                    block_k: int = 512):
+    """q: (B,S,Hq,D); k/v: (B,S,Hkv,D) -> (B,S,Hq,D)."""
+    out, _, _ = _fwd(q, k, v, causal, block_q, block_k)
+    return out
+
+
+def _fwd(q, k, v, causal, bq, bk):
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    nq, nk = S // bq, S // bk
+    scale = 1.0 / math.sqrt(D)
+    qb = jnp.moveaxis(q.reshape(B, nq, bq, Hkv, G, D), 1, 0)
+    kb = jnp.moveaxis(k.reshape(B, nk, bk, Hkv, D), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, bk, Hkv, D), 1, 0)
+
+    def qblock(qi, q_i):
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, k_j, v_j = inp
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_i, k_j,
+                           preferred_element_type=jnp.float32) * scale
+            s = jnp.where(_mask(qi, ki, bq, bk, causal)[None, None, None],
+                          s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(v_j.dtype), v_j).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, bq, D), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0),
+                                  (jnp.arange(nk), kb, vb))
+        o = (acc / jnp.maximum(l, 1e-30)[..., None])
+        return o, m, l  # o: (B,Hkv,G,bq,D)
+
+    outs, ms, ls = lax.map(lambda i: qblock(i, qb[i]), jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 1)                      # (B,nq,Hkv,G,bq,D)
+    out = jnp.moveaxis(out, (2, 3), (3, 4)).reshape(B, S, Hq, D).astype(q.dtype)
+    return out, ms, ls  # ms/ls: (nq,B,Hkv,G,bq)
+
+
+def _fwd_vjp(q, k, v, causal, bq, bk):
+    out, ms, ls = _fwd(q, k, v, causal, bq, bk)
+    return out, (q, k, v, out, ms, ls)
+
+
+def _bwd_vjp(causal, bq, bk, res, dout):
+    q, k, v, out, ms, ls = res
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    nq, nk = S // bq, S // bk
+    scale = 1.0 / math.sqrt(D)
+
+    qb = jnp.moveaxis(q.reshape(B, nq, bq, Hkv, G, D), 1, 0)
+    kb = jnp.moveaxis(k.reshape(B, nk, bk, Hkv, D), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, bk, Hkv, D), 1, 0)
+    ob = jnp.moveaxis(out.reshape(B, nq, bq, Hkv, G, D), 1, 0)
+    dob = jnp.moveaxis(dout.reshape(B, nq, bq, Hkv, G, D), 1, 0)
+
+    # delta = rowsum(do * o)  (B,Hkv,G,bq) per q block
+    def qblock(qi):
+        q_i = qb[qi]
+        do_i = jnp.moveaxis(dob[qi], 1, 3).astype(jnp.float32)  # B,Hkv,G,bq,D
+        o_i = jnp.moveaxis(ob[qi], 1, 3).astype(jnp.float32)
+        delta = (do_i * o_i).sum(-1)                    # (B,Hkv,G,bq)
+        m_i, l_i = ms[qi], ls[qi]
+
+        def kv_step(dq_acc, inp):
+            ki, k_j, v_j = inp
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_i, k_j,
+                           preferred_element_type=jnp.float32) * scale
+            s = jnp.where(_mask(qi, ki, bq, bk, causal)[None, None, None],
+                          s, NEG_INF)
+            p = jnp.exp(s - m_i[..., None]) / jnp.maximum(l_i, 1e-30)[..., None]
+            dp = jnp.einsum("bhgqd,bkhd->bhgqk", do_i, v_j.astype(jnp.float32))
+            ds = p * (dp - delta[..., None]) * scale
+            dv_j = jnp.einsum("bhgqk,bhgqd->bkhd", p, do_i)
+            dk_j = jnp.einsum("bhgqk,bqhgd->bkhd", ds,
+                              q_i.astype(jnp.float32))
+            dq_new = dq_acc + jnp.einsum("bhgqk,bkhd->bqhgd", ds,
+                                         k_j.astype(jnp.float32))
+            return dq_new, (dk_j, dv_j)
+
+        dq0 = jnp.zeros((B, bq, Hkv, G, D), jnp.float32)
+        dq_i, (dks, dvs) = lax.scan(kv_step, dq0, (jnp.arange(nk), kb, vb))
+        return dq_i, dks, dvs
+
+    dqs, dks, dvs = lax.map(qblock, jnp.arange(nq))
+    # dq: (nq,B,bq,Hkv,G,D) -> (B,S,Hq,D)
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(B, S, Hkv, G, D).reshape(B, S, Hq, D)
+    # dk/dv: (nq,nk,B,bk,Hkv,D) summed over q blocks
+    dk = jnp.moveaxis(dks.sum(0), 0, 1).reshape(B, S, Hkv, D)
+    dv = jnp.moveaxis(dvs.sum(0), 0, 1).reshape(B, S, Hkv, D)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_fwd_vjp, _bwd_vjp)

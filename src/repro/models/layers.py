@@ -1,0 +1,437 @@
+"""Shared building blocks for the model zoo (pure JAX, no framework).
+
+Everything here is a pair of functions: ``*_defs(cfg) -> pytree[ParamDef]``
+and ``*_apply(params, x, ...) -> y``.  Attention comes in three flavours:
+
+* ``dense_attention``     — single-einsum, for short sequences / smoke tests
+* ``blockwise_attention`` — lax.scan online-softmax (memory-bounded) for
+                            train/prefill at 4k–32k
+* ``local_attention``     — exact two-chunk sliding-window attention
+* ``decode_attention``    — one-token query over a (possibly seq-sharded)
+                            KV cache, stable softmax (lowers to small
+                            all-reduces when the cache is sequence-parallel)
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common.pytree import ParamDef
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_defs(dim: int) -> dict:
+    return {"scale": ParamDef((dim,), ("embed",), init="zeros")}
+
+
+def rmsnorm_apply(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * lax.rsqrt(var + eps)
+    # gemma-style (1 + scale): zero-init scale == identity
+    return (x * (1.0 + p["scale"].astype(jnp.float32))).astype(dtype)
+
+
+def layernorm_defs(dim: int) -> dict:
+    return {
+        "scale": ParamDef((dim,), ("embed",), init="ones"),
+        "bias": ParamDef((dim,), ("embed",), init="zeros"),
+    }
+
+
+def layernorm_apply(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    dtype = x.dtype
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, d/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)
+
+
+def sinusoidal_at(pos: jax.Array, dim: int) -> jax.Array:
+    """Sinusoidal embedding for a single (traced) position: (dim,)."""
+    p = pos.astype(jnp.float32)
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32) * (-math.log(10000.0) / dim))
+    pe = jnp.zeros((dim,), jnp.float32)
+    pe = pe.at[0::2].set(jnp.sin(p * div))
+    pe = pe.at[1::2].set(jnp.cos(p * div))
+    return pe
+
+
+def sinusoidal_pos(seq: int, dim: int, offset: int = 0) -> jax.Array:
+    pos = jnp.arange(offset, offset + seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32) * (-math.log(10000.0) / dim))
+    pe = jnp.zeros((seq, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# attention cores
+# ---------------------------------------------------------------------------
+
+def _softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+NEG_INF = -1e30
+
+
+def dense_attention(q, k, v, *, causal: bool, window: int | None = None,
+                    softcap: float | None = None, prefix_len: int = 0,
+                    q_offset: int = 0) -> jax.Array:
+    """q: (B,Sq,Hq,D), k/v: (B,Sk,Hkv,D).  Exact reference path."""
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qr = q.reshape(B, Sq, Hkv, G, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k,
+                        preferred_element_type=jnp.float32)
+    scores = _softcap(scores / math.sqrt(D), softcap)
+    qi = jnp.arange(Sq)[:, None] + q_offset
+    ki = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = ki <= qi
+        if prefix_len > 0:  # prefix-LM: bidirectional over the prefix
+            mask = mask | (ki < prefix_len)
+    if window is not None:
+        mask = mask & (ki > qi - window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(B, Sq, Hq, D)
+
+
+def blockwise_attention(q, k, v, *, causal: bool, softcap: float | None = None,
+                        prefix_len: int = 0, block_q: int = 512,
+                        block_k: int = 512, split_wedge: bool = True) -> jax.Array:
+    """Online-softmax blockwise attention (flash-style, pure jnp).
+
+    Memory: O(block_q * block_k) per step instead of O(S^2).
+
+    ``split_wedge``: for causal masks, splits the computation into the
+    block-diagonal part plus a dense strictly-lower wedge processed in
+    halves, avoiding the classic 2x masked-FLOP waste of naive block
+    scanning (see EXPERIMENTS.md §Perf).
+    """
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    nq = S // block_q
+    nk = S // block_k
+    assert nq * block_q == S and nk * block_k == S, (S, block_q, block_k)
+
+    qb = q.reshape(B, nq, block_q, Hkv, G, D)
+    kb = k.reshape(B, nk, block_k, Hkv, D)
+    vb = v.reshape(B, nk, block_k, Hkv, D)
+    scale = 1.0 / math.sqrt(D)
+
+    def qblock(qi, q_i):
+        # scan over kv blocks with online softmax
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, k_j, v_j = inp
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_i, k_j,
+                           preferred_element_type=jnp.float32) * scale
+            s = _softcap(s, softcap)
+            qpos = qi * block_q + jnp.arange(block_q)
+            kpos = ki * block_k + jnp.arange(block_k)
+            mask = jnp.ones((block_q, block_k), bool)
+            if causal:
+                mask = kpos[None, :] <= qpos[:, None]
+                if prefix_len > 0:
+                    mask = mask | (kpos[None, :] < prefix_len)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(v_j.dtype), v_j).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, block_q), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, block_q, D), jnp.float32)
+        ks = jnp.arange(nk)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0),
+                                  (ks, jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out  # (B,Hkv,G,block_q,D)
+
+    if causal and split_wedge and prefix_len == 0 and nq >= 4 and nq % 2 == 0:
+        # recursive halving: top half is fully causal-local, bottom half =
+        # dense rectangle over the top + causal within itself.
+        return _wedge_attention(q, k, v, softcap=softcap, prefix_len=prefix_len,
+                                block_q=block_q, block_k=block_k)
+
+    outs = lax.map(lambda i: qblock(i, qb[:, i]), jnp.arange(nq))
+    return _assemble(outs, B, S, Hq, D, nq, block_q).astype(q.dtype)
+
+
+def _assemble(outs, B, S, Hq, D, nq, block_q):
+    # outs: (nq, B, Hkv, G, block_q, D)
+    out = jnp.moveaxis(outs, 0, 1)  # (B, nq, Hkv, G, bq, D)
+    out = jnp.moveaxis(out, (2, 3), (3, 4))  # (B, nq, bq, Hkv, G, D)
+    return out.reshape(B, S, Hq, D)
+
+
+def _wedge_attention(q, k, v, *, softcap, prefix_len, block_q, block_k,
+                     min_len: int = 2048):
+    """Causal attention via recursive wedge split: FLOPs ~ S^2/2 exactly.
+
+    attn(q[:h], k[:h]) causal  |  attn(q[h:], k[:h]) dense + attn(q[h:], k[h:]) causal
+    The dense rectangle needs a softmax-merge with the causal part.
+    """
+    B, S, Hq, D = q.shape
+    h = S // 2
+    if S <= min_len or S % 2 != 0:
+        return blockwise_attention(q, k, v, causal=True, softcap=softcap,
+                                   prefix_len=prefix_len, block_q=min(block_q, S),
+                                   block_k=min(block_k, S), split_wedge=False)
+    top = _wedge_attention(q[:, :h], k[:, :h], v[:, :h], softcap=softcap,
+                           prefix_len=prefix_len, block_q=block_q,
+                           block_k=block_k, min_len=min_len)
+    # bottom: merge dense-rectangle (kv first half) with causal second half
+    bot = _merge_two(q[:, h:], k[:, :h], v[:, :h], k[:, h:], v[:, h:],
+                     softcap=softcap, q_offset=h, prefix_len=prefix_len,
+                     block_q=block_q, block_k=block_k, min_len=min_len)
+    return jnp.concatenate([top, bot], axis=1)
+
+
+def _partial_dense(q, k, v, *, softcap, mask=None):
+    """Returns (out_unnormalized fp32, m, l) for softmax merging."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qr = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    s = _softcap(s, softcap)
+    if mask is not None:
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = s.max(-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(-1)
+    out = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v.dtype), v).astype(jnp.float32)
+    return out, m, l
+
+
+def _merge_two(q, k1, v1, k2, v2, *, softcap, q_offset, prefix_len,
+               block_q, block_k, min_len):
+    """softmax-merge: dense attn over (k1,v1) + causal attn over (k2,v2)."""
+    B, Sq, Hq, D = q.shape
+    # part 1: dense rectangle, chunked over kv to bound memory
+    nchunk = max(1, k1.shape[1] // max(block_k, 1))
+    k1b = k1.reshape(B, nchunk, -1, *k1.shape[2:])
+    v1b = v1.reshape(B, nchunk, -1, *v1.shape[2:])
+
+    Hkv = k1.shape[2]
+    G = Hq // Hkv
+
+    def step(carry, inp):
+        m, l, acc = carry
+        k_j, v_j = inp
+        o, m2, l2 = _partial_dense(q, k_j, v_j, softcap=softcap)
+        m_new = jnp.maximum(m, m2)
+        c1, c2 = jnp.exp(m - m_new), jnp.exp(m2 - m_new)
+        return (m_new, l * c1 + l2 * c2, acc * c1[..., None] + o * c2[..., None]), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, D), jnp.float32)
+    (m, l, acc), _ = lax.scan(step, (m0, l0, a0),
+                              (jnp.moveaxis(k1b, 1, 0), jnp.moveaxis(v1b, 1, 0)))
+
+    # part 2: causal within second half (recursive wedge), but we need its
+    # unnormalized stats — rerun its top-level merge instead: compute causal
+    # part with the same chunked online softmax.
+    nq2 = q.shape[1]
+    qpos = jnp.arange(nq2)[:, None]
+    kpos = jnp.arange(k2.shape[1])[None, :]
+    causal_mask = kpos <= qpos  # both halves share offset, so relative works
+    o2, m2, l2 = _partial_dense(q, k2, v2, softcap=softcap, mask=causal_mask)
+    m_new = jnp.maximum(m, m2)
+    c1, c2 = jnp.exp(m - m_new), jnp.exp(m2 - m_new)
+    l_f = l * c1 + l2 * c2
+    acc_f = acc * c1[..., None] + o2 * c2[..., None]
+    out = acc_f / jnp.maximum(l_f, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1)  # (B, Sq, Hkv, G, D)
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def local_attention(q, k, v, *, window: int, softcap: float | None = None) -> jax.Array:
+    """Exact sliding-window causal attention via two-chunk trick.
+
+    Chunk size = window; each query chunk attends (prev chunk ++ own chunk)
+    with the exact (kpos <= qpos) & (kpos > qpos - window) mask.
+    FLOPs: 2*S*window per head pair — no quadratic term.
+    """
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    W = window
+    if S <= W:
+        return dense_attention(q, k, v, causal=True, window=W, softcap=softcap)
+    pad = (-S) % W
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = q.shape[1]
+    C = Sp // W
+    qc = q.reshape(B, C, W, Hq, D)
+    kc = k.reshape(B, C, W, Hkv, D)
+    vc = v.reshape(B, C, W, Hkv, D)
+    k_prev = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], axis=1)
+    kk = jnp.concatenate([k_prev, kc], axis=2)  # (B,C,2W,Hkv,D)
+    vv = jnp.concatenate([v_prev, vc], axis=2)
+    G = Hq // Hkv
+    qr = qc.reshape(B, C, W, Hkv, G, D)
+    s = jnp.einsum("bcqhgd,bckhd->bchgqk", qr, kk,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    s = _softcap(s, softcap)
+    qpos = jnp.arange(W)[:, None] + W  # position within the 2W window frame
+    kpos = jnp.arange(2 * W)[None, :]
+    mask = (kpos <= qpos) & (kpos > qpos - W)
+    # first chunk has no previous keys
+    first = jnp.arange(C) == 0
+    valid_prev = ~first[:, None, None]
+    mask_c = mask[None] & (valid_prev | (kpos >= W)[None])
+    s = jnp.where(mask_c[None, :, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(vv.dtype)
+    o = jnp.einsum("bchgqk,bckhd->bcqhgd", p, vv)
+    o = o.reshape(B, Sp, Hq, D)
+    return o[:, :S]
+
+
+def quantize_kv(x):
+    """(B,S,H,D) -> (int8 values, per-(token,head) f32 scales)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def decode_attention_quant(q, k_q, v_q, k_s, v_s, *, length, softcap=None):
+    """Decode attention over an int8 KV cache without materializing a
+    dequantized copy: scales fold into the logits / the prob weights.
+
+    q: (B,1,Hq,D); k_q/v_q: (B,S,Hkv,D) int8; k_s/v_s: (B,S,Hkv) f32."""
+    B, _, Hq, D = q.shape
+    Smax, Hkv = k_q.shape[1], k_q.shape[2]
+    G = Hq // Hkv
+    qr = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qr, k_q.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    s = s * jnp.moveaxis(k_s, 2, 1)[:, :, None, :] / math.sqrt(D)
+    s = _softcap(s, softcap)
+    kpos = jnp.arange(Smax)[None, None, None, :]
+    s = jnp.where(kpos < length, s, NEG_INF)
+    m = s.max(-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    pw = p * jnp.moveaxis(v_s, 2, 1)[:, :, None, :]   # fold value scales
+    o = jnp.einsum("bhgk,bkhd->bhgd", pw, v_q.astype(jnp.float32))
+    return o.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, length: jax.Array,
+                     window: int | None = None, softcap: float | None = None) -> jax.Array:
+    """q: (B,1,Hq,D) against cache (B,Smax,Hkv,D); ``length`` = #valid tokens.
+
+    Works with a sequence-sharded cache: the softmax max/sum reductions over
+    Smax lower to all-reduces under pjit (sequence-parallel decode).
+    """
+    B, _, Hq, D = q.shape
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    qr = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qr, k_cache,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    s = _softcap(s, softcap)
+    kpos = jnp.arange(Smax)[None, None, None, :]
+    mask = kpos < length
+    if window is not None:
+        mask = mask & (kpos >= length - window)
+    s = jnp.where(mask, s, NEG_INF)
+    m = s.max(-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(-1, keepdims=True)
+    o = jnp.einsum("bhgk,bkhd->bhgd", (p / jnp.maximum(l, 1e-30)).astype(v_cache.dtype),
+                   v_cache)
+    return o.reshape(B, 1, Hq, D)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (projections + rope + cache mgmt)
+# ---------------------------------------------------------------------------
+
+def gqa_defs(cfg) -> dict:
+    D, Hq, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    d = {
+        "wq": ParamDef((D, Hq, Dh), ("embed", "heads", None), init="scaled"),
+        "wk": ParamDef((D, Hkv, Dh), ("embed", "kv_heads", None), init="scaled"),
+        "wv": ParamDef((D, Hkv, Dh), ("embed", "kv_heads", None), init="scaled"),
+        "wo": ParamDef((Hq, Dh, D), ("heads", None, "embed"), init="scaled"),
+    }
+    if cfg.qk_norm:
+        d["q_norm"] = {"scale": ParamDef((Dh,), (None,), init="zeros")}
+        d["k_norm"] = {"scale": ParamDef((Dh,), (None,), init="zeros")}
+    return d
+
+
+def _maybe_qknorm(cfg, p, q, k):
+    if cfg.qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q)
+        k = rmsnorm_apply(p["k_norm"], k)
+    return q, k
+
+
+def gqa_project(p, x, cfg, positions, theta):
+    cdt = x.dtype
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"].astype(cdt))
+    q, k = _maybe_qknorm(cfg, p, q, k)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def gqa_out(p, o, x_dtype):
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"].astype(o.dtype)).astype(x_dtype)

@@ -1,0 +1,127 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3, arXiv:2405.04434 §2.1).
+
+KV is compressed to a ``kv_lora_rank`` latent + a small shared RoPE key;
+the decode cache stores only (c_kv, k_rope) per token — 576 dims instead of
+2 * H * head_dim.  Decode uses the *absorbed* form (W_UK folded into the
+query, W_UV applied to the latent context) so attention runs directly on
+the latent cache.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import ParamDef
+from repro.models.layers import (
+    apply_rope,
+    blockwise_attention,
+    dense_attention,
+    rmsnorm_apply,
+    NEG_INF,
+)
+
+
+def mla_defs(cfg) -> dict:
+    D, H = cfg.d_model, cfg.n_heads
+    r_kv, d_nope, d_rope, d_v = (cfg.kv_lora_rank, cfg.qk_nope_head_dim,
+                                 cfg.qk_rope_head_dim, cfg.v_head_dim)
+    d = {
+        "wkv_a": ParamDef((D, r_kv + d_rope), ("embed", "mla_latent"), init="scaled"),
+        "kv_norm": {"scale": ParamDef((r_kv,), (None,), init="zeros")},
+        "wkv_b": ParamDef((r_kv, H, d_nope + d_v), (None, "heads", None), init="scaled"),
+        "wo": ParamDef((H, d_v, D), ("heads", None, "embed"), init="scaled"),
+    }
+    if cfg.q_lora_rank:
+        r_q = cfg.q_lora_rank
+        d["wq_a"] = ParamDef((D, r_q), ("embed", None), init="scaled")
+        d["q_norm"] = {"scale": ParamDef((r_q,), (None,), init="zeros")}
+        d["wq_b"] = ParamDef((r_q, H, d_nope + d_rope), (None, "heads", None), init="scaled")
+    else:
+        d["wq"] = ParamDef((D, H, d_nope + d_rope), ("embed", "heads", None), init="scaled")
+    return d
+
+
+def _queries(p, x, cfg, positions):
+    d_nope, d_rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        q_lat = x @ p["wq_a"].astype(x.dtype)
+        q_lat = rmsnorm_apply(p["q_norm"], q_lat)
+        q = jnp.einsum("bsr,rhe->bshe", q_lat, p["wq_b"].astype(x.dtype))
+    else:
+        q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(x.dtype))
+    q_nope, q_pe = q[..., :d_nope], q[..., d_nope:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def _latent_kv(p, x, cfg, positions):
+    """Returns (c_kv normalized, k_pe roped) — exactly what the cache stores."""
+    r_kv, d_rope = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    kv_a = x @ p["wkv_a"].astype(x.dtype)
+    c_kv, k_pe = kv_a[..., :r_kv], kv_a[..., r_kv:]
+    c_kv = rmsnorm_apply(p["kv_norm"], c_kv)
+    k_pe = apply_rope(k_pe[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_pe
+
+
+def mla_train(p, x, cfg, positions, *, prefix_len: int = 0):
+    """Non-absorbed form for train/prefill: materialize per-head K/V and run
+    blockwise causal attention."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    d_nope, d_rope, d_v = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_pe = _queries(p, x, cfg, positions)
+    c_kv, k_pe = _latent_kv(p, x, cfg, positions)
+    kv = jnp.einsum("bsr,rhe->bshe", c_kv, p["wkv_b"].astype(x.dtype))
+    k_nope, v = kv[..., :d_nope], kv[..., d_nope:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (B, S, H, d_rope))],
+                        axis=-1)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    # pad V up to the qk head dim so one attention kernel serves both
+    if d_v < d_nope + d_rope:
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, d_nope + d_rope - d_v)))
+    if S <= 2048:
+        o = dense_attention(q, k, v, causal=True, prefix_len=prefix_len)
+    elif cfg.flash_attention and prefix_len == 0:
+        from repro.models.flash import flash_attention
+        o = flash_attention(q, k, v, True, cfg.block_q, cfg.block_k)
+    else:
+        o = blockwise_attention(q, k, v, causal=True, prefix_len=prefix_len,
+                                block_q=cfg.block_q, block_k=cfg.block_k)
+    o = o[..., :d_v]
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"].astype(x.dtype)).astype(x.dtype)
+
+
+def mla_prefill_cache(p, x, cfg, positions):
+    """(c_kv, k_pe) to stash in the decode cache."""
+    return _latent_kv(p, x, cfg, positions)
+
+
+def mla_decode(p, x, cfg, c_cache, pe_cache, *, length):
+    """Absorbed decode: x (B,1,D); cache c (B,Smax,r_kv), pe (B,Smax,d_rope).
+
+    score_h(t) = q_nope_h . (W_UK_h c_t) + q_pe_h . k_pe_t
+               = (W_UK_h^T q_nope_h) . c_t + q_pe_h . k_pe_t
+    ctx_h = W_UV_h^T (sum_t p_t c_t)
+    """
+    B = x.shape[0]
+    H = cfg.n_heads
+    d_nope, d_rope, d_v = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    positions = jnp.full((B, 1), length, jnp.int32)
+    q_nope, q_pe = _queries(p, x, cfg, positions)  # (B,1,H,*)
+    w_uk = p["wkv_b"][..., :d_nope].astype(x.dtype)   # (r, H, d_nope)
+    w_uv = p["wkv_b"][..., d_nope:].astype(x.dtype)   # (r, H, d_v)
+    q_eff = jnp.einsum("bhe,rhe->bhr", q_nope[:, 0], w_uk)  # (B,H,r)
+    scale = 1.0 / math.sqrt(d_nope + d_rope)
+    s = (jnp.einsum("bhr,bkr->bhk", q_eff, c_cache.astype(x.dtype),
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bhe,bke->bhk", q_pe[:, 0], pe_cache.astype(x.dtype),
+                      preferred_element_type=jnp.float32)) * scale
+    kpos = jnp.arange(c_cache.shape[1])[None, None, :]
+    s = jnp.where(kpos <= length, s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhk,bkr->bhr", pr.astype(x.dtype), c_cache.astype(x.dtype))
+    o = jnp.einsum("bhr,rhe->bhe", ctx, w_uv)  # (B,H,d_v)
+    return jnp.einsum("bhe,hed->bd", o, p["wo"].astype(x.dtype))[:, None]

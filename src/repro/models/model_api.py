@@ -1,0 +1,307 @@
+"""Public Model API: init / loss / prefill / decode_step / input_specs.
+
+One class serves the whole zoo; behaviour is driven entirely by ModelConfig.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.common.pytree import ParamDef, abstract, materialize, specs_of
+from repro.common.sharding import MeshRules
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import moe as MOE
+from repro.models import transformer as T
+from repro.models.layers import sinusoidal_at, sinusoidal_pos
+from repro.models.transformer import Group, _apply_layer, _norm_apply, _norm_defs
+
+
+def _group_defs(cfg, g: Group) -> dict:
+    d = {}
+    for j, kind in enumerate(g.kinds):
+        d[f"l{j}"] = T._stack_defs(T.layer_defs(cfg, kind), g.n)
+    return d
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, mesh=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.groups = T.build_groups(cfg)
+        self.compute_dtype = jnp.bfloat16
+        self.param_dtype = jnp.dtype(cfg.param_dtype)
+
+    # ------------------------------------------------------------------ defs
+    def param_defs(self) -> dict:
+        cfg = self.cfg
+        pd = jnp.dtype(cfg.param_dtype)
+
+        def dtyped(tree):
+            return jax.tree.map(
+                lambda d: ParamDef(d.shape, d.axes, init=d.init, dtype=pd, scale=d.scale),
+                tree, is_leaf=lambda x: isinstance(x, ParamDef))
+
+        d: dict = {
+            "embed": ParamDef((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                              init="normal", dtype=pd),
+            "final_norm": _norm_defs(cfg),
+            "groups": [_group_defs(cfg, g) for g in self.groups],
+        }
+        if not cfg.tie_embeddings:
+            d["lm_head"] = ParamDef((cfg.d_model, cfg.vocab), ("embed", "vocab"),
+                                    init="scaled", dtype=pd)
+        if cfg.shared_attn_period:
+            d["shared_block"] = T.layer_defs(cfg, ("gqa_g", "mlp"))
+        if cfg.enc_dec:
+            d["enc_groups"] = [_group_defs(cfg, g) for g in T.enc_groups(cfg)]
+            d["enc_norm"] = _norm_defs(cfg)
+        return dtyped(d)
+
+    def init(self, key: jax.Array):
+        return materialize(self.param_defs(), key)
+
+    def param_specs(self, rules: MeshRules | None = None):
+        rules = rules or self.rules()
+        return specs_of(self.param_defs(), rules)
+
+    def rules(self) -> MeshRules:
+        assert self.mesh is not None
+        overrides = MOE.moe_param_overrides(self.cfg) or {}
+        return MeshRules.create(self.mesh, overrides)
+
+    # -------------------------------------------------------------- plumbing
+    def _embed(self, params, tokens):
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(self.compute_dtype)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), self.compute_dtype)
+        return x
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        w = (params["embed"] if cfg.tie_embeddings else params["lm_head"].T)
+        logits = jnp.einsum("bsd,vd->bsv", x, w.astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+        if cfg.tie_embeddings and cfg.embed_scale:
+            logits = logits / math.sqrt(cfg.d_model)
+        if cfg.final_softcap is not None:
+            logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+        return logits
+
+    def _run_groups(self, pgroups, x, *, mode, caches, positions, prefix_len,
+                    enc_out=None, shared_params=None, group_list=None):
+        cfg, mesh = self.cfg, self.mesh
+        group_list = group_list or self.groups
+        new_caches = []
+        for gi, g in enumerate(group_list):
+            gp = pgroups[gi]
+            gc = None if caches is None else caches[gi]
+
+            def body(xc, slices, g=g):
+                pslice, cslice = slices
+                ncs = {}
+                for j, kind in enumerate(g.kinds):
+                    c_j = None if cslice is None else cslice.get(f"l{j}")
+                    xc, nc = _apply_layer(
+                        cfg, kind, pslice[f"l{j}"], xc, mesh=mesh,
+                        positions=positions, mode=mode, cache=c_j,
+                        prefix_len=prefix_len, enc_out=enc_out,
+                        shared_params=shared_params)
+                    if cslice is not None:
+                        ncs[f"l{j}"] = nc if nc is not None else c_j
+                return xc, ncs
+
+            if mode == "train":
+                def fbody_(xc, ps, g=g):
+                    xc, nc = body(xc, (ps, None), g=g)
+                    if cfg.seq_parallel and self.mesh is not None:
+                        from jax.sharding import PartitionSpec as P
+                        batch_axes = tuple(a for a in self.mesh.axis_names
+                                           if a in ("pod", "data"))
+                        xc = lax.with_sharding_constraint(
+                            xc, P(batch_axes, "model", None))
+                    return xc, nc
+                fbody = jax.checkpoint(fbody_)
+                x, _ = lax.scan(fbody, x, gp)
+                new_caches.append(None)
+            else:
+                x, nc = lax.scan(lambda xc, s: body(xc, s), x, (gp, gc))
+                new_caches.append(nc)
+        return x, new_caches
+
+    # ------------------------------------------------------------------ train
+    def loss(self, params, batch):
+        """Next-token CE.  batch: tokens (B,S) [+ img/frames]."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S_text = tokens.shape
+        x = self._embed(params, tokens)
+        prefix_len = 0
+        enc_out = None
+
+        if cfg.vlm_prefix_len:
+            img = batch["img"].astype(self.compute_dtype)  # (B, P, D)
+            x = jnp.concatenate([img, x], axis=1)
+            prefix_len = cfg.vlm_prefix_len
+        if cfg.enc_dec:
+            enc_out = self._encode(params, batch["frames"])
+        S = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        if cfg.enc_dec:
+            x = x + sinusoidal_pos(S, cfg.d_model).astype(x.dtype)[None]
+
+        shared = params.get("shared_block")
+        x, _ = self._run_groups(params["groups"], x, mode="train", caches=None,
+                                positions=positions, prefix_len=prefix_len,
+                                enc_out=enc_out, shared_params=shared)
+        x = _norm_apply(cfg, params["final_norm"], x)
+        logits = self._logits(params, x)
+        if cfg.vlm_prefix_len:
+            logits = logits[:, cfg.vlm_prefix_len:]
+        # next-token prediction over text tokens
+        tgt = tokens[:, 1:]
+        lg = logits[:, :-1].astype(jnp.float32)
+        mask = batch.get("loss_mask")
+        mask = jnp.ones_like(tgt, jnp.float32) if mask is None else mask[:, 1:].astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(lg, axis=-1)
+        picked = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+        nll = (lse - picked) * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+    def _encode(self, params, frames):
+        cfg = self.cfg
+        x = frames.astype(self.compute_dtype)
+        x = x + sinusoidal_pos(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+        B = x.shape[0]
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None], (B, x.shape[1]))
+        x, _ = self._run_groups(params["enc_groups"], x, mode="train", caches=None,
+                                positions=positions, prefix_len=0,
+                                group_list=T.enc_groups(cfg))
+        return _norm_apply(cfg, params["enc_norm"], x)
+
+    # ------------------------------------------------------------------ serve
+    def cache_defs(self, batch: int, max_len: int):
+        cfg = self.cfg
+        out = []
+        for g in self.groups:
+            gd = {}
+            for j, kind in enumerate(g.kinds):
+                cd = T._cache_defs_for(cfg, kind, batch, max_len)
+                if cd is not None:
+                    gd[f"l{j}"] = T._stack_defs(cd, g.n)
+                else:
+                    gd[f"l{j}"] = {}
+            out.append(gd)
+        return {"layers": out, "pos": ParamDef((), (), init="zeros", dtype=jnp.int32)}
+
+    def init_cache(self, batch: int, max_len: int):
+        return materialize(self.cache_defs(batch, max_len), jax.random.PRNGKey(0))
+
+    def prefill(self, params, batch, max_len: int | None = None):
+        """Forward over the prompt, building the decode cache.
+
+        Returns (last_logits (B,V), cache)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S_text = tokens.shape
+        x = self._embed(params, tokens)
+        prefix_len = 0
+        enc_out = None
+        if cfg.vlm_prefix_len:
+            x = jnp.concatenate([batch["img"].astype(self.compute_dtype), x], axis=1)
+            prefix_len = cfg.vlm_prefix_len
+        if cfg.enc_dec:
+            enc_out = self._encode(params, batch["frames"])
+        S = x.shape[1]
+        max_len = max_len or S
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        if cfg.enc_dec:
+            x = x + sinusoidal_pos(S, cfg.d_model).astype(x.dtype)[None]
+        cache = self.init_cache(B, max_len)
+        shared = params.get("shared_block")
+        x, ncaches = self._run_groups(params["groups"], x, mode="prefill",
+                                      caches=cache["layers"], positions=positions,
+                                      prefix_len=prefix_len, enc_out=enc_out,
+                                      shared_params=shared)
+        x = _norm_apply(cfg, params["final_norm"], x)
+        logits = self._logits(params, x[:, -1:])[:, 0]
+        return logits, {"layers": ncaches, "pos": jnp.asarray(S, jnp.int32)}
+
+    def decode_step(self, params, cache, tokens):
+        """tokens (B,1) at position cache["pos"].  Returns (logits, cache)."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        pos = cache["pos"]
+        x = self._embed(params, tokens)
+        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+        if cfg.enc_dec:
+            x = x + sinusoidal_at(pos, cfg.d_model).astype(x.dtype)[None, None]
+        shared = params.get("shared_block")
+        x, ncaches = self._run_groups(params["groups"], x, mode="decode",
+                                      caches=cache["layers"], positions=positions,
+                                      prefix_len=0, shared_params=shared)
+        x = _norm_apply(cfg, params["final_norm"], x)
+        logits = self._logits(params, x)[:, 0]
+        return logits, {"layers": ncaches, "pos": pos + 1}
+
+    # ------------------------------------------------------------- dry-run IO
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of this cell."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        bf16 = jnp.bfloat16
+        if shape.kind in ("train", "prefill"):
+            S_text = S - cfg.vlm_prefix_len if cfg.vlm_prefix_len else S
+            d = {"tokens": jax.ShapeDtypeStruct((B, S_text), i32)}
+            if cfg.vlm_prefix_len:
+                d["img"] = jax.ShapeDtypeStruct((B, cfg.vlm_prefix_len, cfg.d_model), bf16)
+            if cfg.enc_dec:
+                d["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), bf16)
+            return d
+        # decode: one new token over a seq_len cache
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "cache": abstract(self.cache_defs(B, S)),
+        }
+
+    def batch_pspecs(self, shape: ShapeConfig, rules: MeshRules | None = None):
+        rules = rules or self.rules()
+        B = shape.global_batch
+        specs = self.input_specs(shape)
+
+        def tok_spec(name):
+            s = specs[name] if name in specs else None
+            return rules.pspec(("batch",) + (None,) * (len(s.shape) - 1), s.shape)
+
+        if shape.kind in ("train", "prefill"):
+            d = {"tokens": tok_spec("tokens")}
+            if self.cfg.vlm_prefix_len:
+                d["img"] = tok_spec("img")
+            if self.cfg.enc_dec:
+                d["frames"] = tok_spec("frames")
+            return d
+        cache_rules = self.cache_rules(shape)
+        return {
+            "tokens": cache_rules.pspec(("batch", None), (B, 1)),
+            "cache": specs_of(self.cache_defs(B, shape.seq_len), cache_rules),
+        }
+
+    def cache_rules(self, shape: ShapeConfig) -> MeshRules:
+        overrides = dict(MOE.moe_param_overrides(self.cfg) or {})
+        if shape.cache_shard == "seq":
+            overrides.update({"batch": (), "seq": ("pod", "data")})
+        elif self.cfg.decode_seq_shard:
+            # batch over (pod, data) AND cache sequence over "model":
+            # decode attention's softmax reductions over the sharded seq
+            # axis lower to small all-reduces (sequence-parallel decode)
+            overrides.update({"seq": ("model",), "kv_heads": ()})
+        else:
+            overrides.update({"seq": ()})
+        return MeshRules.create(self.mesh, overrides)

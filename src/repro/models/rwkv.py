@@ -1,0 +1,189 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): attention-free time mixing with
+data-dependent per-channel decay, + squared-ReLU channel mixing.
+
+Recurrence per head (state S: (d_k, d_v)):
+    out_t = r_t . (S_t + diag(u) k_t^T v_t)
+    S_t+1 = diag(w_t) S_t + k_t^T v_t
+with w_t = exp(-exp(w0 + lora(x_t)))  (the data-dependent decay).
+
+Train path: lax.scan over time.  Decode: single recurrence step.
+Simplification vs the full release: the r/k/v/g token-shift lerps use static
+learned mixes (the decay w keeps its full data-dependent LoRA); DESIGN.md
+records this.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common.pytree import ParamDef
+
+
+LORA_RANK = 64
+
+
+def rwkv6_defs(cfg) -> dict:
+    D = cfg.d_model
+    H = cfg.n_heads
+    dk = D // H
+    return {
+        "time": {
+            "mu_r": ParamDef((D,), ("embed",), init="zeros"),
+            "mu_k": ParamDef((D,), ("embed",), init="zeros"),
+            "mu_v": ParamDef((D,), ("embed",), init="zeros"),
+            "mu_w": ParamDef((D,), ("embed",), init="zeros"),
+            "mu_g": ParamDef((D,), ("embed",), init="zeros"),
+            "wr": ParamDef((D, D), ("embed", "heads"), init="scaled"),
+            "wk": ParamDef((D, D), ("embed", "heads"), init="scaled"),
+            "wv": ParamDef((D, D), ("embed", "heads"), init="scaled"),
+            "wg": ParamDef((D, D), ("embed", "heads"), init="scaled"),
+            "w0": ParamDef((D,), ("embed",), init="zeros"),
+            "w_lora_a": ParamDef((D, LORA_RANK), ("embed", None), init="scaled"),
+            "w_lora_b": ParamDef((LORA_RANK, D), (None, "embed"), init="zeros"),
+            "u": ParamDef((H, dk), ("heads", None), init="zeros"),
+            "ln_scale": ParamDef((D,), ("embed",), init="ones"),
+            "ln_bias": ParamDef((D,), ("embed",), init="zeros"),
+            "wo": ParamDef((D, D), ("heads", "embed"), init="scaled"),
+        },
+        "channel": {
+            "mu_k": ParamDef((D,), ("embed",), init="zeros"),
+            "mu_r": ParamDef((D,), ("embed",), init="zeros"),
+            "wk": ParamDef((D, cfg.d_ff), ("embed", "mlp"), init="scaled"),
+            "wv": ParamDef((cfg.d_ff, D), ("mlp", "embed"), init="scaled"),
+            "wr": ParamDef((D, D), ("embed", "heads"), init="scaled"),
+        },
+    }
+
+
+def _shift(x, prev_tok):
+    """Token shift: x_{t-1}; prev_tok (B,D) seeds t=0 (decode carry)."""
+    if x.shape[1] == 1:
+        return prev_tok[:, None]
+    shifted = jnp.concatenate([prev_tok[:, None], x[:, :-1]], axis=1)
+    return shifted
+
+
+def _lerp(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def rwkv6_time_mix(p, x, cfg, state):
+    """x: (B,S,D); state: {"S": (B,H,dk,dv), "tok": (B,D)} or None."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dk = D // H
+    prev = jnp.zeros((B, D), x.dtype) if state is None else state["tok"].astype(x.dtype)
+    xs = _shift(x, prev)
+
+    r = _lerp(x, xs, p["mu_r"]) @ p["wr"].astype(x.dtype)
+    k = _lerp(x, xs, p["mu_k"]) @ p["wk"].astype(x.dtype)
+    v = _lerp(x, xs, p["mu_v"]) @ p["wv"].astype(x.dtype)
+    g = _lerp(x, xs, p["mu_g"]) @ p["wg"].astype(x.dtype)
+    xw = _lerp(x, xs, p["mu_w"])
+    w_log = (p["w0"].astype(jnp.float32)
+             + jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"].astype(jnp.float32))
+             @ p["w_lora_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(w_log))  # (B,S,D) in (0,1)
+
+    rh = r.reshape(B, S, H, dk).astype(jnp.float32)
+    kh = k.reshape(B, S, H, dk).astype(jnp.float32)
+    vh = v.reshape(B, S, H, dk).astype(jnp.float32)
+    wh = w.reshape(B, S, H, dk)
+    u = p["u"].astype(jnp.float32)
+
+    s0 = (jnp.zeros((B, H, dk, dk), jnp.float32) if state is None
+          else state["S"].astype(jnp.float32))
+
+    Q = getattr(cfg, "rwkv_chunk", 0)
+    if Q and S > Q and S % Q == 0:
+        S_f, y = _chunked_time_mix(rh, kh, vh, wh, u, s0, Q)
+    else:
+        def step(S_c, inp):
+            r_t, k_t, v_t, w_t = inp  # each (B,H,dk)
+            kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,dk,dv)
+            out = jnp.einsum("bhk,bhkv->bhv", r_t, S_c + u[None, :, :, None] * kv)
+            S_n = w_t[..., :, None] * S_c + kv
+            return S_n, out
+
+        xs_t = tuple(jnp.moveaxis(a, 1, 0) for a in (rh, kh, vh, wh))
+        S_f, outs = lax.scan(step, s0, xs_t)
+        y = jnp.moveaxis(outs, 0, 1)
+    y = y.reshape(B, S, D)
+
+    # per-head group norm
+    yh = y.reshape(B, S, H, dk)
+    mu_ = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mu_) * lax.rsqrt(var + 64e-5)
+    y = yh.reshape(B, S, D) * p["ln_scale"].astype(jnp.float32) + p["ln_bias"].astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(g))
+    out = y @ p["wo"].astype(x.dtype)
+    new_state = {"S": S_f, "tok": x[:, -1].astype(jnp.float32)}
+    return out, new_state
+
+
+def _chunked_time_mix(rh, kh, vh, wh, u, s0, Q):
+    """Chunk-parallel RWKV-6 (GLA-style): one lax.scan over S/Q chunks with
+    within-chunk parallel form.  All decay exponents are relative
+    (la_{t-1}-la_s <= 0 for s<t; la_Q-la_s <= 0), so everything is bounded
+    — no 1/A blowup.  Replaces the token-level scan whose backward
+    materializes per-token state residuals (the rwkv6 train cell's memory
+    wall, EXPERIMENTS.md §Perf)."""
+    B, S, H, dk = rh.shape
+    C = S // Q
+    resh = lambda a: jnp.moveaxis(a.reshape(B, C, Q, H, dk), 1, 0)
+    rc, kc, vc, wc = resh(rh), resh(kh), resh(vh), resh(wh)
+
+    def chunk(S_c, inp):
+        r, k, v, w = inp                       # (B,Q,H,dk)
+        la = jnp.cumsum(jnp.log(jnp.maximum(w, 1e-30)), axis=1)   # (B,Q,H,dk)
+        la_prev = jnp.concatenate([jnp.zeros_like(la[:, :1]), la[:, :-1]], axis=1)
+        # inter-chunk: r_t decayed against the incoming state
+        q_eff = r * jnp.exp(la_prev)
+        y_inter = jnp.einsum("bthd,bhdv->bthv", q_eff, S_c)
+        # intra-chunk: scores[t,s] = sum_d r_t k_s exp(la_prev_t - la_s), s<t
+        E = jnp.exp(jnp.clip(la_prev[:, :, None] - la[:, None, :], -60.0, 0.0))
+        M = jnp.einsum("bthd,bshd,btshd->bths", r, k, E)
+        mask = (jnp.arange(Q)[:, None] > jnp.arange(Q)[None, :])
+        M = M * mask[None, :, None, :]  # M: (B, t, H, s)
+        y_intra = jnp.einsum("bths,bshv->bthv", M, v)
+        # diagonal bonus: (r_t . (u*k_t)) v_t
+        bonus = jnp.einsum("bthd,bthd->bth", r, u[None, None] * k)
+        y = y_inter + y_intra + bonus[..., None] * v
+        # state to end of chunk
+        decay_end = jnp.exp(la[:, -1][:, None] - la)              # (B,Q,H,dk) <= 1
+        S_n = (S_c * jnp.exp(la[:, -1])[..., None]
+               + jnp.einsum("bshd,bshv->bhdv", k * decay_end, v))
+        return S_n, y
+
+    S_f, ys = lax.scan(chunk, s0, (rc, kc, vc, wc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, C * Q, H, dk)
+    return S_f, y
+
+
+def rwkv6_channel_mix(p, x, cfg, state):
+    """Squared-relu channel mixing; state: {"tok": (B,D)} or None."""
+    B, S, D = x.shape
+    prev = jnp.zeros((B, D), x.dtype) if state is None else state["tok"].astype(x.dtype)
+    xs = _shift(x, prev)
+    kx = _lerp(x, xs, p["mu_k"])
+    rx = _lerp(x, xs, p["mu_r"])
+    k = jnp.square(jax.nn.relu(kx @ p["wk"].astype(x.dtype)))
+    out = jax.nn.sigmoid(rx @ p["wr"].astype(x.dtype)) * (k @ p["wv"].astype(x.dtype))
+    return out, {"tok": x[:, -1].astype(jnp.float32)}
+
+
+def rwkv6_state_defs(cfg, batch: int) -> dict:
+    D = cfg.d_model
+    H = cfg.n_heads
+    dk = D // H
+    return {
+        "time": {
+            "S": ParamDef((batch, H, dk, dk), ("batch", "heads", None, None), init="zeros"),
+            "tok": ParamDef((batch, D), ("batch", "embed"), init="zeros"),
+        },
+        "channel": {
+            "tok": ParamDef((batch, D), ("batch", "embed"), init="zeros"),
+        },
+    }

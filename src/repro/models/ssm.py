@@ -1,0 +1,169 @@
+"""Mamba-2 block (SSD, arXiv:2405.21060) — chunked scan formulation.
+
+Train path: the "minimal SSD" chunked algorithm — quadratic within a chunk,
+linear state passing between chunks (one lax.scan over chunks).
+Decode path: single-step recurrence on (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common.pytree import ParamDef
+from repro.models.layers import rmsnorm_apply
+
+
+def mamba2_defs(cfg) -> dict:
+    D = cfg.d_model
+    Din = cfg.d_inner
+    ds = cfg.ssm_state
+    nh = cfg.ssm_nheads
+    k = cfg.ssm_conv
+    conv_dim = Din + 2 * ds  # x + B + C (single group)
+    return {
+        # in_proj -> [z (Din), x (Din), B (ds), C (ds), dt (nh)]
+        "w_in": ParamDef((D, 2 * Din + 2 * ds + nh), ("embed", "mlp"), init="scaled"),
+        "conv_w": ParamDef((k, conv_dim), (None, "mlp"), init="scaled"),
+        "conv_b": ParamDef((conv_dim,), ("mlp",), init="zeros"),
+        "A_log": ParamDef((nh,), (None,), init="zeros"),
+        "dt_bias": ParamDef((nh,), (None,), init="zeros"),
+        "D_skip": ParamDef((nh,), (None,), init="ones"),
+        "out_norm": {"scale": ParamDef((Din,), ("mlp",), init="zeros")},
+        "w_out": ParamDef((Din, D), ("mlp", "embed"), init="scaled"),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    Din, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    z = zxbcdt[..., :Din]
+    xbc = zxbcdt[..., Din:Din + Din + 2 * ds]
+    dt = zxbcdt[..., Din + Din + 2 * ds:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, state=None):
+    """Depthwise causal conv1d, kernel k.  xbc: (B,S,C); state: (B,k-1,C)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(xbc[:, : k - 1])
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i].astype(xbc.dtype) for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else jnp.zeros((xbc.shape[0], 0, xbc.shape[2]), xbc.dtype)
+    return jax.nn.silu(out + b.astype(xbc.dtype)), new_state
+
+
+def _ssd_chunked(xh, dt, A, Bc, Cc, cfg, init_state=None):
+    """SSD chunk scan.
+
+    xh: (B,S,nh,hd); dt: (B,S,nh) (post-softplus); A: (nh,) negative;
+    Bc/Cc: (B,S,ds).  Returns (y: (B,S,nh,hd), final_state: (B,nh,hd,ds)).
+    """
+    Bsz, S, nh, hd = xh.shape
+    ds = Bc.shape[-1]
+    Q = min(cfg.ssm_chunk, S)
+    S_orig = S
+    pad = (-S) % Q
+    if pad:  # zero-pad: dt=0 on pads => identity state transition
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    C = S // Q
+
+    xq = xh.reshape(Bsz, C, Q, nh, hd)
+    dtq = dt.reshape(Bsz, C, Q, nh)
+    Bq = Bc.reshape(Bsz, C, Q, ds)
+    Cq = Cc.reshape(Bsz, C, Q, ds)
+
+    dA = dtq * A[None, None, None, :]                     # (B,C,Q,nh) negative
+    dA_cum = jnp.cumsum(dA, axis=2)                       # within-chunk cumsum
+
+    # within-chunk (quadratic in Q): L[i,j] = exp(dA_cum_i - dA_cum_j) for j<=i
+    diff = dA_cum[:, :, :, None, :] - dA_cum[:, :, None, :, :]   # (B,C,Q,Q,nh)
+    ii = jnp.arange(Q)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    L = jnp.where(causal, jnp.exp(diff), 0.0)
+    sc = jnp.einsum("bcqs,bcks->bcqk", Cq, Bq, preferred_element_type=jnp.float32)
+    M = sc[..., None] * L                                  # (B,C,Q,Q,nh)
+    y_diag = jnp.einsum("bcqkh,bckhe,bckh->bcqhe", M, xq.astype(jnp.float32),
+                        dtq.astype(jnp.float32))
+
+    # chunk states: S_c = sum_j exp(dA_cum_Q - dA_cum_j) * dt_j * B_j x_j^T
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (B,C,Q,nh)
+    states = jnp.einsum("bcqh,bcqh,bcqs,bcqhe->bchse",
+                        decay_to_end, dtq.astype(jnp.float32), Bq, xq.astype(jnp.float32))
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])             # (B,C,nh)
+
+    def carry_fn(s_prev, inp):
+        st, dec = inp                                      # (B,nh,ds,hd), (B,nh)
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    s0 = (jnp.zeros((Bsz, nh, ds, hd), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    final, s_prevs = lax.scan(
+        carry_fn,
+        s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)                  # (B,C,nh,ds,hd)
+
+    # inter-chunk contribution: y_off = C_i . exp(dA_cum_i) S_prev
+    y_off = jnp.einsum("bcqs,bcqh,bchse->bcqhe",
+                       Cq, jnp.exp(dA_cum), s_prevs)
+    y = (y_diag + y_off).reshape(Bsz, S, nh, hd)[:, :S_orig]
+    return y.astype(xh.dtype), final
+
+
+def mamba2_apply(p, x, cfg, state=None):
+    """x: (B,S,D) -> (B,S,D).  state: None (train) or dict for decode carry.
+
+    Returns (y, new_state).
+    """
+    Bsz, S, D = x.shape
+    nh, hd, ds = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    zxbcdt = x @ p["w_in"].astype(x.dtype)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs = xbc[..., :cfg.d_inner].reshape(Bsz, S, nh, hd)
+    Bc = xbc[..., cfg.d_inner:cfg.d_inner + ds]
+    Cc = xbc[..., cfg.d_inner + ds:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if S == 1:  # decode: exact single-step recurrence
+        s_prev = (jnp.zeros((Bsz, nh, ds, hd), jnp.float32) if state is None
+                  else state["ssm"].astype(jnp.float32))
+        dA = jnp.exp(dt[:, 0] * A[None, :])                      # (B,nh)
+        dBx = jnp.einsum("bh,bs,bhe->bhse", dt[:, 0], Bc[:, 0].astype(jnp.float32),
+                         xs[:, 0].astype(jnp.float32))
+        s_new = s_prev * dA[..., None, None] + dBx
+        y = jnp.einsum("bs,bhse->bhe", Cc[:, 0].astype(jnp.float32), s_new)
+        y = y[:, None].astype(x.dtype)
+        final = s_new
+    else:
+        init = None if state is None else state["ssm"]
+        y, final = _ssd_chunked(xs, dt, A, Bc, Cc, cfg, init)
+
+    y = y + xs * p["D_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(Bsz, S, cfg.d_inner)
+    y = rmsnorm_apply(p["out_norm"], y) * jax.nn.silu(z)
+    out = y @ p["w_out"].astype(x.dtype)
+    new_state = {"conv": new_conv.astype(jnp.float32), "ssm": final}
+    return out, new_state
+
+
+def mamba2_state_defs(cfg, batch: int) -> dict:
+    """Abstract decode-state shapes (for cache specs)."""
+    k = cfg.ssm_conv
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": ParamDef((batch, k - 1, conv_dim), ("batch", None, "mlp"), init="zeros"),
+        "ssm": ParamDef((batch, cfg.ssm_nheads, cfg.ssm_state, cfg.ssm_headdim),
+                        ("batch", None, None, None), init="zeros"),
+    }

@@ -1,0 +1,431 @@
+"""Unified model assembly for the whole zoo.
+
+A model = embedding + a list of *groups*.  Each group is a stack of
+identical *periods* scanned with ``lax.scan`` (weights stacked on a leading
+``layers`` dim), where a period is a short tuple of heterogeneous layers —
+e.g. gemma2's ("local attn", "global attn") pair, gemma3's 5 local + 1
+global, zamba2's 6 mamba blocks + 1 shared-attention application.  This
+keeps the HLO small (one while-loop per group) while giving every sub-layer
+its exact structure (no masked-FLOP conditionals).
+
+Layer kinds (mixer, ffn):
+  ("gqa_g","mlp")  global causal GQA      ("gqa_l","mlp")  sliding window
+  ("mla","mlp"|"moe")  deepseek latent attention (+MoE)
+  ("mamba", None)  mamba2                  ("rwkv6","rwkv_ffn")  rwkv6
+  ("shared_gqa","mlp")  zamba2 shared block (params NOT scanned)
+  ("enc_attn","mlp")  bidirectional        ("dec_attn","mlp")  causal+cross
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common.pytree import ParamDef, abstract, materialize, specs_of
+from repro.common.sharding import MeshRules
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import rwkv as RWKV
+from repro.models import ssm as SSM
+
+
+# ---------------------------------------------------------------------------
+# group construction
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Group:
+    kinds: tuple[tuple[str, str | None], ...]   # one (mixer, ffn) per sub-layer
+    n: int                                      # number of scanned periods
+
+
+def build_groups(cfg) -> list[Group]:
+    Lyr = cfg.n_layers
+    if cfg.block_kind == "rwkv6":
+        return [Group((("rwkv6", "rwkv_ffn"),), Lyr)]
+    if cfg.block_kind == "mamba2":
+        per = cfg.shared_attn_period or Lyr
+        kinds = tuple((("mamba", None),) * per) + ((("shared_gqa", "mlp"),) if cfg.shared_attn_period else ())
+        n_full, rem = divmod(Lyr, per)
+        groups = [Group(kinds, n_full)]
+        if rem:
+            groups.append(Group((("mamba", None),) * rem, 1))
+        return groups
+    # attention families
+    ffn = "moe" if cfg.moe else "mlp"
+    mixer = "mla" if cfg.attn_kind == "mla" else None
+    groups: list[Group] = []
+    if cfg.moe and cfg.first_dense_layers:
+        mk = mixer or "gqa_g"
+        groups.append(Group(((mk, "mlp"),), cfg.first_dense_layers))
+        Lyr -= cfg.first_dense_layers
+    if mixer == "mla":
+        groups.append(Group((("mla", ffn),), Lyr))
+        return groups
+    period = tuple((("gqa_l" if c == "l" else "gqa_g"), "mlp") for c in cfg.attn_pattern)
+    n_full, rem = divmod(Lyr, len(period))
+    if n_full:
+        groups.append(Group(period, n_full))
+    if rem:
+        groups.append(Group(period[:rem], 1))
+    return groups
+
+
+def enc_groups(cfg) -> list[Group]:
+    return [Group((("enc_attn", "mlp"),), cfg.n_enc_layers)]
+
+
+def dec_groups(cfg) -> list[Group]:
+    return [Group((("dec_attn", "mlp"),), cfg.n_layers)]
+
+
+# ---------------------------------------------------------------------------
+# per-layer defs
+# ---------------------------------------------------------------------------
+
+def _norm_defs(cfg):
+    return L.rmsnorm_defs(cfg.d_model) if cfg.norm_kind == "rms" else L.layernorm_defs(cfg.d_model)
+
+
+def _norm_apply(cfg, p, x):
+    return L.rmsnorm_apply(p, x) if cfg.norm_kind == "rms" else L.layernorm_apply(p, x)
+
+
+def mlp_defs(cfg) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    d = {
+        "w1": ParamDef((D, F), ("embed", "mlp"), init="scaled"),
+        "w2": ParamDef((F, D), ("mlp", "embed"), init="scaled"),
+    }
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        d["w3"] = ParamDef((D, F), ("embed", "mlp"), init="scaled")
+    return d
+
+
+def mlp_apply(cfg, p, x):
+    h = x @ p["w1"].astype(x.dtype)
+    if cfg.mlp_kind == "swiglu":
+        h = jax.nn.silu(h) * (x @ p["w3"].astype(x.dtype))
+    elif cfg.mlp_kind == "geglu":
+        h = jax.nn.gelu(h, approximate=True) * (x @ p["w3"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    return h @ p["w2"].astype(x.dtype)
+
+
+def layer_defs(cfg, kind) -> dict:
+    mixer, ffn = kind
+    d: dict = {"ln1": _norm_defs(cfg)}
+    if mixer in ("gqa_g", "gqa_l", "enc_attn", "dec_attn"):
+        d["attn"] = L.gqa_defs(cfg)
+    elif mixer == "mla":
+        d["attn"] = MLA.mla_defs(cfg)
+    elif mixer == "mamba":
+        d["mixer"] = SSM.mamba2_defs(cfg)
+    elif mixer == "rwkv6":
+        d["mixer"] = RWKV.rwkv6_defs(cfg)["time"]
+    elif mixer == "shared_gqa":
+        return {}  # all params live at model level (single shared copy)
+    if mixer == "dec_attn":
+        d["lnx"] = _norm_defs(cfg)
+        d["cross"] = L.gqa_defs(cfg)
+    if ffn == "mlp":
+        d["ln2"] = _norm_defs(cfg)
+        d["mlp"] = mlp_defs(cfg)
+    elif ffn == "moe":
+        d["ln2"] = _norm_defs(cfg)
+        d["moe"] = MOE.moe_defs(cfg)
+    elif ffn == "rwkv_ffn":
+        d["ln2"] = _norm_defs(cfg)
+        d["ffn"] = RWKV.rwkv6_defs(cfg)["channel"]
+    if cfg.post_norm and mixer != "shared_gqa":
+        d["ln1_post"] = _norm_defs(cfg)
+        if ffn in ("mlp", "moe"):
+            d["ln2_post"] = _norm_defs(cfg)
+    return d
+
+
+def _stack_defs(defs, n: int):
+    """Prepend a scanned 'layers' dim of size n to every ParamDef."""
+    return jax.tree.map(
+        lambda d: ParamDef((n, *d.shape), ("layers", *d.axes), init=d.init,
+                           dtype=d.dtype, scale=d.scale),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+# ---------------------------------------------------------------------------
+# cache defs
+# ---------------------------------------------------------------------------
+
+def _cache_defs_for(cfg, kind, batch: int, max_len: int) -> dict | None:
+    mixer, _ = kind
+    Hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    if mixer in ("gqa_g", "dec_attn", "shared_gqa"):
+        kv_dt = jnp.int8 if cfg.kv_quant_int8 else jnp.bfloat16
+        d = {
+            "k": ParamDef((batch, max_len, Hkv, dh), ("batch", "seq", "kv_heads", None),
+                          init="zeros", dtype=kv_dt),
+            "v": ParamDef((batch, max_len, Hkv, dh), ("batch", "seq", "kv_heads", None),
+                          init="zeros", dtype=kv_dt),
+        }
+        if cfg.kv_quant_int8:
+            d["k_s"] = ParamDef((batch, max_len, Hkv), ("batch", "seq", "kv_heads"),
+                                init="zeros", dtype=jnp.float32)
+            d["v_s"] = ParamDef((batch, max_len, Hkv), ("batch", "seq", "kv_heads"),
+                                init="zeros", dtype=jnp.float32)
+        if mixer == "dec_attn":
+            el = cfg.enc_len
+            d["xk"] = ParamDef((batch, el, Hkv, dh), ("batch", None, "kv_heads", None),
+                               init="zeros", dtype=jnp.bfloat16)
+            d["xv"] = ParamDef((batch, el, Hkv, dh), ("batch", None, "kv_heads", None),
+                               init="zeros", dtype=jnp.bfloat16)
+        return d
+    if mixer == "gqa_l":
+        W = min(cfg.window or max_len, max_len)
+        return {
+            "k": ParamDef((batch, W, Hkv, dh), ("batch", None, "kv_heads", None),
+                          init="zeros", dtype=jnp.bfloat16),
+            "v": ParamDef((batch, W, Hkv, dh), ("batch", None, "kv_heads", None),
+                          init="zeros", dtype=jnp.bfloat16),
+        }
+    if mixer == "mla":
+        return {
+            "c": ParamDef((batch, max_len, cfg.kv_lora_rank), ("batch", "seq", "mla_latent"),
+                          init="zeros", dtype=jnp.bfloat16),
+            "pe": ParamDef((batch, max_len, cfg.qk_rope_head_dim), ("batch", "seq", None),
+                           init="zeros", dtype=jnp.bfloat16),
+        }
+    if mixer == "mamba":
+        return SSM.mamba2_state_defs(cfg, batch)
+    if mixer == "rwkv6":
+        return RWKV.rwkv6_state_defs(cfg, batch)
+    if mixer == "enc_attn":
+        return None
+    raise ValueError(mixer)
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+
+def _gqa_attend(cfg, p, x, *, local: bool, positions, mode, cache, prefix_len,
+                softcap, theta):
+    """Returns (out, new_cache)."""
+    B, S, D = x.shape
+    q, k, v = L.gqa_project(p, x, cfg, positions, theta)
+    W = cfg.window
+    if mode == "decode":
+        pos = positions[:, 0]  # (B,) all equal
+        pos0 = pos[0]
+        if local:
+            Wr = cache["k"].shape[1]
+            slot = pos0 % Wr
+            kc = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+            vc = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+            o = _ring_decode(q, kc, vc, pos0, Wr, softcap)
+            new_cache = {"k": kc, "v": vc}
+        elif cfg.kv_quant_int8:
+            kq, ks = L.quantize_kv(k)
+            vq, vs = L.quantize_kv(v)
+            kc = lax.dynamic_update_slice_in_dim(cache["k"], kq, pos0, axis=1)
+            vc = lax.dynamic_update_slice_in_dim(cache["v"], vq, pos0, axis=1)
+            ksc = lax.dynamic_update_slice_in_dim(cache["k_s"], ks, pos0, axis=1)
+            vsc = lax.dynamic_update_slice_in_dim(cache["v_s"], vs, pos0, axis=1)
+            o = L.decode_attention_quant(q, kc, vc, ksc, vsc, length=pos0 + 1,
+                                         softcap=softcap)
+            new_cache = {"k": kc, "v": vc, "k_s": ksc, "v_s": vsc}
+        else:
+            kc = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos0, axis=1)
+            vc = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos0, axis=1)
+            o = L.decode_attention(q, kc, vc, length=pos0 + 1, softcap=softcap)
+            new_cache = {"k": kc, "v": vc}
+        return L.gqa_out(p, o, x.dtype), new_cache
+
+    # train / prefill
+    if local and W is not None and S > W:
+        o = L.local_attention(q, k, v, window=W, softcap=softcap)
+    elif S <= 1024:
+        o = L.dense_attention(q, k, v, causal=True, window=W if local else None,
+                              softcap=softcap, prefix_len=prefix_len)
+    elif cfg.flash_attention and softcap is None and prefix_len == 0:
+        from repro.models.flash import flash_attention
+        o = flash_attention(q, k, v, True, cfg.block_q, cfg.block_k)
+    else:
+        o = L.blockwise_attention(q, k, v, causal=True, softcap=softcap,
+                                  prefix_len=prefix_len, block_q=cfg.block_q,
+                                  block_k=cfg.block_k)
+    new_cache = None
+    if mode == "prefill" and cache is not None:
+        Wr = cache["k"].shape[1]
+        if local:
+            kc, vc = _ring_fill(cache, k, v, S, Wr)
+            new_cache = {"k": kc, "v": vc}
+        elif cfg.kv_quant_int8:
+            kq, ks = L.quantize_kv(k)
+            vq, vs = L.quantize_kv(v)
+            new_cache = {
+                "k": lax.dynamic_update_slice_in_dim(cache["k"], kq, 0, axis=1),
+                "v": lax.dynamic_update_slice_in_dim(cache["v"], vq, 0, axis=1),
+                "k_s": lax.dynamic_update_slice_in_dim(cache["k_s"], ks, 0, axis=1),
+                "v_s": lax.dynamic_update_slice_in_dim(cache["v_s"], vs, 0, axis=1),
+            }
+        else:
+            kc = lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+            vc = lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+            new_cache = {"k": kc, "v": vc}
+    return L.gqa_out(p, o, x.dtype), new_cache
+
+
+def _ring_fill(cache, k, v, S, Wr):
+    """Store last Wr tokens of (k, v) in ring order (slot = pos % Wr)."""
+    take = min(S, Wr)
+    k_t = k[:, S - take:]
+    v_t = v[:, S - take:]
+    pos = jnp.arange(S - take, S) % Wr
+    kc = cache["k"].at[:, pos].set(k_t.astype(cache["k"].dtype))
+    vc = cache["v"].at[:, pos].set(v_t.astype(cache["v"].dtype))
+    return kc, vc
+
+
+def _ring_decode(q, kc, vc, pos, Wr, softcap):
+    """Decode attention over a ring cache: slot j holds abs position
+    p = pos - ((pos - j) mod Wr); valid iff p >= 0 (softmax is order-free)."""
+    j = jnp.arange(Wr)
+    abs_pos = pos - jnp.mod(pos - j, Wr)
+    B, _, Hq, Dh = q.shape
+    Hkv = kc.shape[2]
+    G = Hq // Hkv
+    qr = q.reshape(B, Hkv, G, Dh)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qr, kc,
+                   preferred_element_type=jnp.float32) / math.sqrt(Dh)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = (abs_pos >= 0)[None, None, None, :]
+    s = jnp.where(mask, s, L.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(vc.dtype), vc)
+    return o.reshape(B, 1, Hq, Dh)
+
+
+def _apply_layer(cfg, kind, p, x, *, mesh, positions, mode, cache, prefix_len,
+                 enc_out=None, shared_params=None):
+    """One sub-layer.  Returns (x, new_cache)."""
+    mixer, ffn = kind
+    new_cache = cache
+
+    if mixer == "shared_gqa":
+        p = shared_params  # single copy, reused every period
+    theta = cfg.rope_theta
+    if mixer == "gqa_l" and cfg.rope_theta_local is not None:
+        theta = cfg.rope_theta_local
+
+    if mixer in ("gqa_g", "gqa_l", "shared_gqa"):
+        h = _norm_apply(cfg, p["ln1"], x)
+        o, nc = _gqa_attend(cfg, p["attn"], h, local=(mixer == "gqa_l"),
+                            positions=positions, mode=mode, cache=cache,
+                            prefix_len=prefix_len, softcap=cfg.logit_softcap,
+                            theta=theta)
+        if cfg.post_norm and mixer != "shared_gqa":
+            o = _norm_apply(cfg, p["ln1_post"], o)
+        x = x + o
+        new_cache = nc
+    elif mixer == "enc_attn":
+        h = _norm_apply(cfg, p["ln1"], x)
+        q, k, v = _proj_nopos(p["attn"], h)
+        o = (L.dense_attention(q, k, v, causal=False) if h.shape[1] <= 1024 else
+             L.blockwise_attention(q, k, v, causal=False, block_q=cfg.block_q,
+                                   block_k=cfg.block_k))
+        x = x + L.gqa_out(p["attn"], o, x.dtype)
+        new_cache = None
+    elif mixer == "dec_attn":
+        h = _norm_apply(cfg, p["ln1"], x)
+        o, nc_self = _gqa_attend(cfg, p["attn"], h, local=False, positions=positions,
+                                 mode=mode, cache=None if cache is None else
+                                 {"k": cache["k"], "v": cache["v"]},
+                                 prefix_len=0, softcap=None, theta=cfg.rope_theta)
+        x = x + o
+        # cross attention over encoder memory
+        h = _norm_apply(cfg, p["lnx"], x)
+        q = jnp.einsum("bsd,dhe->bshe", h, p["cross"]["wq"].astype(h.dtype))
+        if mode == "train" or (mode == "prefill" and enc_out is not None):
+            xk = jnp.einsum("bsd,dhe->bshe", enc_out, p["cross"]["wk"].astype(h.dtype))
+            xv = jnp.einsum("bsd,dhe->bshe", enc_out, p["cross"]["wv"].astype(h.dtype))
+        else:
+            xk, xv = cache["xk"].astype(h.dtype), cache["xv"].astype(h.dtype)
+        o = L.dense_attention(q, xk, xv, causal=False)
+        x = x + L.gqa_out(p["cross"], o, x.dtype)
+        if cache is not None:
+            new_cache = dict(nc_self or {},
+                             xk=xk.astype(cache["xk"].dtype),
+                             xv=xv.astype(cache["xv"].dtype))
+        else:
+            new_cache = None
+    elif mixer == "mla":
+        h = _norm_apply(cfg, p["ln1"], x)
+        if mode == "decode":
+            pos0 = positions[0, 0]
+            c_new, pe_new = MLA.mla_prefill_cache(p["attn"], h, cfg, positions)
+            cc = lax.dynamic_update_slice_in_dim(cache["c"], c_new.astype(cache["c"].dtype), pos0, axis=1)
+            pc = lax.dynamic_update_slice_in_dim(cache["pe"], pe_new.astype(cache["pe"].dtype), pos0, axis=1)
+            o = MLA.mla_decode(p["attn"], h, cfg, cc, pc, length=pos0)
+            new_cache = {"c": cc, "pe": pc}
+        else:
+            o = MLA.mla_train(p["attn"], h, cfg, positions, prefix_len=prefix_len)
+            if mode == "prefill" and cache is not None:
+                c_new, pe_new = MLA.mla_prefill_cache(p["attn"], h, cfg, positions)
+                cc = lax.dynamic_update_slice_in_dim(cache["c"], c_new.astype(cache["c"].dtype), 0, axis=1)
+                pc = lax.dynamic_update_slice_in_dim(cache["pe"], pe_new.astype(cache["pe"].dtype), 0, axis=1)
+                new_cache = {"c": cc, "pe": pc}
+            else:
+                new_cache = None
+        x = x + o
+    elif mixer == "mamba":
+        h = _norm_apply(cfg, p["ln1"], x)
+        o, st = SSM.mamba2_apply(p["mixer"], h, cfg, cache)
+        x = x + o
+        new_cache = st if cache is not None else None
+    elif mixer == "rwkv6":
+        h = _norm_apply(cfg, p["ln1"], x)
+        o, st = RWKV.rwkv6_time_mix(p["mixer"], h, cfg,
+                                    None if cache is None else cache["time"])
+        x = x + o
+        if ffn == "rwkv_ffn":
+            h = _norm_apply(cfg, p["ln2"], x)
+            o2, st2 = RWKV.rwkv6_channel_mix(p["ffn"], h, cfg,
+                                             None if cache is None else cache["channel"])
+            x = x + o2
+            new_cache = {"time": st, "channel": st2} if cache is not None else None
+        return x, new_cache
+    else:
+        raise ValueError(mixer)
+
+    # ffn half
+    if ffn == "mlp":
+        h = _norm_apply(cfg, p["ln2"], x)
+        o = mlp_apply(cfg, p["mlp"], h)
+        if cfg.post_norm and mixer != "shared_gqa":
+            o = _norm_apply(cfg, p["ln2_post"], o)
+        x = x + o
+    elif ffn == "moe":
+        h = _norm_apply(cfg, p["ln2"], x)
+        B, S, D = h.shape
+        o = MOE.moe_apply(p["moe"], h.reshape(B * S, D), cfg, mesh).reshape(B, S, D)
+        x = x + o
+    return x, new_cache
+
+
+def _proj_nopos(p, x):
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"].astype(x.dtype))
+    return q, k, v

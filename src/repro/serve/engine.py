@@ -1,0 +1,88 @@
+"""Batched serving engine: prefill + KV-cache decode with request queue.
+
+Synchronized batching v1: requests are grouped into fixed-size batches with
+a common (padded) prompt length; one jitted prefill builds the cache, then
+jitted decode steps run until every request in the batch hits its stop
+length.  Suitable for throughput serving of homogeneous workloads (the
+dry-run decode cells model exactly this regime); continuous per-slot
+batching is noted as future work in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (S,) int32
+    max_new_tokens: int = 16
+
+
+@dataclasses.dataclass
+class Result:
+    rid: int
+    tokens: np.ndarray
+    latency_s: float
+
+
+class ServeEngine:
+    def __init__(self, model, params, batch_slots: int = 8, max_len: int = 256,
+                 greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.greedy = greedy
+        self._prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len=max_len))
+        self._decode = jax.jit(model.decode_step)
+
+    def _pad_prompts(self, reqs: list[Request]) -> np.ndarray:
+        # right-align is unnecessary under synchronized batching: all
+        # prompts padded to the max length with repeats of the last token.
+        L = max(r.prompt.shape[0] for r in reqs)
+        out = np.zeros((len(reqs), L), np.int32)
+        for i, r in enumerate(reqs):
+            out[i, :len(r.prompt)] = r.prompt
+            out[i, len(r.prompt):] = r.prompt[-1]
+        return out
+
+    def run(self, requests: list[Request]) -> list[Result]:
+        results = []
+        for i in range(0, len(requests), self.slots):
+            group = requests[i:i + self.slots]
+            results.extend(self._run_group(group))
+        return results
+
+    def _run_group(self, group: list[Request]) -> list[Result]:
+        t0 = time.monotonic()
+        pad = self.slots - len(group)
+        reqs = group + [Request(-1, group[-1].prompt, 0)] * pad
+        prompts = self._pad_prompts(reqs)
+        batch = {"tokens": jnp.asarray(prompts)}
+        cfg = self.model.cfg
+        if cfg.vlm_prefix_len:
+            batch["img"] = jnp.zeros((len(reqs), cfg.vlm_prefix_len, cfg.d_model),
+                                     jnp.bfloat16)
+        if cfg.enc_dec:
+            batch["frames"] = jnp.zeros((len(reqs), prompts.shape[1], cfg.d_model),
+                                        jnp.bfloat16)
+        logits, cache = self._prefill(self.params, batch)
+        max_new = max(r.max_new_tokens for r in group)
+        max_new = min(max_new, self.max_len - prompts.shape[1] - 1)
+        toks = [np.asarray(jnp.argmax(logits, -1))]
+        cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        for _ in range(max_new - 1):
+            logits, cache = self._decode(self.params, cache, cur)
+            cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            toks.append(np.asarray(cur[:, 0]))
+        gen = np.stack(toks, axis=1)  # (slots, max_new)
+        dt = time.monotonic() - t0
+        return [Result(r.rid, gen[i, :r.max_new_tokens], dt)
+                for i, r in enumerate(group)]

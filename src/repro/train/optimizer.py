@@ -1,0 +1,136 @@
+"""AdamW with mixed-precision master weights and ZeRO-1 state sharding.
+
+Implemented from scratch (no optax dependency):
+
+* params may live in bf16; the optimizer keeps an fp32 (or bf16, per
+  config) master copy + moments, and the working params are re-cast from
+  the master each step.
+* ZeRO-1: optimizer-state PartitionSpecs get the "data" mesh axis added to
+  their first shardable dim, so moments/master are sharded across data
+  parallelism (the reduce-scatter/all-gather this induces under pjit is
+  exactly the ZeRO-1 communication pattern).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import TrainConfig
+
+
+def lr_schedule(tcfg: TrainConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(tcfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - tcfg.warmup_steps) /
+                    jnp.maximum(tcfg.total_steps - tcfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return tcfg.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def init_opt_state(params, opt_dtype=jnp.float32, keep_master: bool = True):
+    def zeros_like_t(x):
+        return jnp.zeros(x.shape, opt_dtype)
+
+    state = {
+        "mu": jax.tree.map(zeros_like_t, params),
+        "nu": jax.tree.map(zeros_like_t, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+    if keep_master:
+        state["master"] = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state, tcfg: TrainConfig):
+    """Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    lr = lr_schedule(tcfg, count)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, tcfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    b1, b2, eps, wd = tcfg.beta1, tcfg.beta2, tcfg.eps, tcfg.weight_decay
+    bc1 = 1 - b1 ** count.astype(jnp.float32)
+    bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+    masters = state.get("master", params)
+
+    def upd(p, g, mu, nu, m):
+        g = g.astype(jnp.float32) * clip
+        mu2 = b1 * mu.astype(jnp.float32) + (1 - b1) * g
+        nu2 = b2 * nu.astype(jnp.float32) + (1 - b2) * g * g
+        step_ = (mu2 / bc1) / (jnp.sqrt(nu2 / bc2) + eps)
+        m32 = m.astype(jnp.float32)
+        m_new = m32 - lr * (step_ + wd * m32)
+        return (m_new.astype(p.dtype), mu2.astype(mu.dtype), nu2.astype(nu.dtype),
+                m_new)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    flat_m = jax.tree.leaves(masters)
+    outs = [upd(*t) for t in zip(flat_p, flat_g, flat_mu, flat_nu, flat_m)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_state = {
+        "mu": jax.tree.unflatten(tdef, [o[1] for o in outs]),
+        "nu": jax.tree.unflatten(tdef, [o[2] for o in outs]),
+        "count": count,
+    }
+    if "master" in state:
+        new_state["master"] = jax.tree.unflatten(tdef, [o[3] for o in outs])
+    else:
+        new_params = jax.tree.unflatten(tdef, [o[3].astype(p.dtype)
+                                               for o, p in zip(outs, flat_p)])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, new_state, metrics
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 sharding of optimizer state
+# ---------------------------------------------------------------------------
+
+def zero1_spec(pspec: P, shape: tuple[int, ...], mesh, axis: str = "data") -> P:
+    """Add ``axis`` to the first dim that is unsharded and divisible."""
+    if mesh is None or axis not in mesh.axis_names:
+        return pspec
+    n = mesh.shape[axis]
+    used = set()
+    for e in pspec:
+        if e is None:
+            continue
+        for a in (e if isinstance(e, tuple) else (e,)):
+            used.add(a)
+    if axis in used:
+        return pspec
+    parts = list(pspec) + [None] * (len(shape) - len(pspec))
+    for i, (e, dim) in enumerate(zip(parts, shape)):
+        if e is None and dim % n == 0 and dim >= n:
+            parts[i] = axis
+            return P(*parts)
+        # extend an existing sharding tuple if divisible
+    return pspec
+
+
+def opt_state_specs(param_specs, param_defs, mesh, zero1: bool = True,
+                    keep_master: bool = True):
+    from repro.common.pytree import ParamDef
+
+    def spec_of(ps, pd):
+        if not zero1:
+            return ps
+        return zero1_spec(ps, pd.shape, mesh)
+
+    moment_specs = jax.tree.map(spec_of, param_specs, param_defs,
+                                is_leaf=lambda x: isinstance(x, P))
+    out = {"mu": moment_specs, "nu": moment_specs, "count": P()}
+    if keep_master:
+        out["master"] = moment_specs
+    return out

@@ -1,0 +1,13 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests and benches must see
+the single real CPU device; only launch/dryrun.py forces 512 devices."""
+import jax
+import pytest
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,97 @@
+"""Block-level consistency: mamba2 chunked-vs-recurrent, rwkv6 scan,
+MoE impls, MLA absorbed-decode vs train form."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import rwkv as RWKV
+from repro.models import ssm as SSM
+from repro.common.pytree import materialize
+
+
+def test_mamba2_chunked_matches_stepwise(key):
+    cfg = smoke_config("zamba2-1.2b")
+    p = materialize(SSM.mamba2_defs(cfg), key)
+    B, S = 2, 16
+    x = 0.5 * jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+    y_chunk, _ = SSM.mamba2_apply(p, x, dataclasses.replace(cfg, ssm_chunk=8))
+    # stepwise decode over the same tokens
+    state = {"conv": jnp.zeros((B, cfg.ssm_conv - 1, cfg.d_inner + 2 * cfg.ssm_state)),
+             "ssm": jnp.zeros((B, cfg.ssm_nheads, cfg.ssm_state, cfg.ssm_headdim))}
+    outs = []
+    for t in range(S):
+        o, state = SSM.mamba2_apply(p, x[:, t:t + 1], cfg, state)
+        outs.append(o)
+    y_step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk, np.float32),
+                               np.asarray(y_step, np.float32), rtol=2e-3, atol=2e-3)
+
+
+def test_rwkv6_scan_matches_stepwise(key):
+    cfg = smoke_config("rwkv6-3b")
+    defs = RWKV.rwkv6_defs(cfg)
+    p = materialize(defs, key)
+    B, S = 2, 12
+    x = 0.5 * jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+    y_all, _ = RWKV.rwkv6_time_mix(p["time"], x, cfg, None)
+    state = {"S": jnp.zeros((B, cfg.n_heads, cfg.d_model // cfg.n_heads,
+                             cfg.d_model // cfg.n_heads)),
+             "tok": jnp.zeros((B, cfg.d_model))}
+    outs = []
+    for t in range(S):
+        o, state = RWKV.rwkv6_time_mix(p["time"], x[:, t:t + 1], cfg, state)
+        outs.append(o)
+    y_step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_all, np.float32),
+                               np.asarray(y_step, np.float32), rtol=2e-3, atol=2e-3)
+
+
+def test_moe_dense_gates_sum_to_one(key):
+    cfg = smoke_config("deepseek-v3-671b")
+    p = materialize(MOE.moe_defs(cfg), key)
+    x = jax.random.normal(key, (16, cfg.d_model), jnp.float32)
+    gates, idx = MOE._router(p["router"], x, cfg)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, rtol=1e-5)
+    assert int(idx.max()) < cfg.n_experts
+
+
+def test_moe_capacity_scatter_roundtrip(key):
+    """scatter -> gather with ample capacity is the identity (x gates)."""
+    T, k, E, cap, D = 10, 2, 4, 8, 6
+    idx = jax.random.randint(key, (T, k), 0, E)
+    x = jax.random.normal(key, (T, D), jnp.float32)
+    pos, kept = MOE._positions(idx, jnp.ones_like(idx, bool), E, cap)
+    assert bool(kept.all())
+    buf = MOE._scatter_slots(x, idx, pos, kept, E, cap)
+    ones = jnp.ones((T, k), jnp.float32)
+    back = MOE._gather_slots(buf, idx, pos, kept, ones)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x) * np.asarray(
+        jnp.ones((T, 1))) * k if False else np.asarray(x) * k, rtol=1e-6)
+
+
+def test_moe_capacity_drops_overflow(key):
+    T, k, E, cap = 16, 2, 2, 3
+    idx = jnp.zeros((T, k), jnp.int32)  # all to expert 0 -> overflow
+    pos, kept = MOE._positions(idx, jnp.ones_like(idx, bool), E, cap)
+    assert int(kept.sum()) == cap
+
+
+def test_mla_absorbed_decode_matches_train_form(key):
+    cfg = smoke_config("deepseek-v3-671b")
+    p = materialize(MLA.mla_defs(cfg), key)
+    B, S = 2, 8
+    x = 0.5 * jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    y_train = MLA.mla_train(p, x, cfg, pos)
+    # decode the last token against the latent cache of the first S-1
+    c, pe = MLA.mla_prefill_cache(p, x, cfg, pos)
+    y_dec = MLA.mla_decode(p, x[:, -1:], cfg, c, pe, length=jnp.asarray(S - 1))
+    np.testing.assert_allclose(np.asarray(y_dec[:, 0], np.float32),
+                               np.asarray(y_train[:, -1], np.float32),
+                               rtol=2e-3, atol=2e-3)

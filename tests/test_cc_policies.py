@@ -1,0 +1,133 @@
+"""Unit behaviour of each CC policy's defining mechanism (paper §II-D)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cc import (ALL_POLICIES, get_policy, make_dcqcn, make_dctcp,
+                           make_hpcc, make_static_window, make_timely)
+
+LINE = 25e9
+F = 4
+
+
+def _sig(t=0.0, ecn=0.0, rtt=2e-6, util=0.1):
+    return {"ecn": jnp.full((F,), ecn, jnp.float32),
+            "rtt": jnp.full((F,), rtt, jnp.float32),
+            "util": jnp.full((F,), util, jnp.float32),
+            "t": jnp.asarray(t, jnp.float32), "dt": 1e-6,
+            "line": jnp.full((F,), LINE, jnp.float32),
+            "base_rtt": jnp.full((F,), 2e-6, jnp.float32)}
+
+
+def _init(pol):
+    line = jnp.full((F,), LINE, jnp.float32)
+    return pol.init(F, line, line * 2e-6)
+
+
+def test_pfc_only_always_line_rate():
+    pol = get_policy("pfc")
+    st = _init(pol)
+    st, rate, win = pol.update(pol.params, st, _sig(ecn=1.0, rtt=1.0))
+    assert np.all(np.asarray(rate) == LINE)
+    assert np.all(np.asarray(win) > 1e15)
+
+
+def test_dcqcn_cuts_on_cnp_and_recovers():
+    pol = make_dcqcn()
+    st = _init(pol)
+    st, rate, _ = pol.update(pol.params, st, _sig(t=1e-4, ecn=0.5))
+    cut_rate = np.asarray(rate)
+    assert np.all(cut_rate < LINE)  # multiplicative decrease
+    # no marks for a long time -> recovery toward line rate
+    r = cut_rate
+    for i in range(200):
+        st, rate, _ = pol.update(pol.params, st, _sig(t=1e-4 + (i + 1) * 55e-6))
+    assert np.all(np.asarray(rate) > cut_rate * 1.5)
+
+
+def test_dcqcn_rate_dependent_cnp():
+    """A collapsed-rate flow sends few packets -> few CNPs -> smaller cut."""
+    pol = make_dcqcn()
+    st = _init(pol)
+    st["rc"] = jnp.asarray([25e9, 25e6, 25e9, 25e6], jnp.float32)
+    st2, rate, _ = pol.update(pol.params, st, _sig(t=1e-4, ecn=0.02))
+    r = np.asarray(rate)
+    assert r[0] / 25e9 < r[1] / 25e6  # high-rate flow cut proportionally more
+
+
+def test_dctcp_window_proportional_to_marking():
+    pol = make_dctcp()
+    st = _init(pol)
+    w0 = np.asarray(st["w"]).copy()
+    # marked RTT -> shrink ~alpha/2
+    st, _, w = pol.update(pol.params, st, _sig(t=5e-6, ecn=1.0))
+    assert np.all(np.asarray(w) < w0)
+    # unmarked RTTs -> additive growth
+    st, _, w1 = pol.update(pol.params, st, _sig(t=15e-6, ecn=0.0))
+    st, _, w2 = pol.update(pol.params, st, _sig(t=25e-6, ecn=0.0))
+    assert np.all(np.asarray(w2) >= np.asarray(w1))
+
+
+def test_timely_gradient_rule():
+    pol = make_timely()
+    st = _init(pol)
+    # rtt far above thigh -> multiplicative decrease
+    st, rate, _ = pol.update(pol.params, st, _sig(t=1e-4, rtt=5e-3))
+    assert np.all(np.asarray(rate) < LINE)
+    # rtt below tlow -> additive increase
+    st2 = _init(pol)
+    st2["rate"] = jnp.full((F,), LINE / 10, jnp.float32)
+    st2, rate2, _ = pol.update(pol.params, st2, _sig(t=1e-4, rtt=1e-6))
+    assert np.all(np.asarray(rate2) > LINE / 10)
+
+
+def test_hpcc_targets_eta_utilization():
+    pol = make_hpcc()
+    st = _init(pol)
+    w0 = np.asarray(st["w"]).copy()
+    # util far above eta -> window shrinks
+    st, _, w = pol.update(pol.params, st, _sig(t=5e-6, util=2.0))
+    assert np.all(np.asarray(w) < w0)
+    # util below eta -> grows (additive probe)
+    st2 = _init(pol)
+    st2, _, w2 = pol.update(pol.params, st2, _sig(t=5e-6, util=0.2))
+    assert np.all(np.asarray(w2) >= w0)
+
+
+def test_hpcc_wire_overhead_is_modeled():
+    assert get_policy("hpcc").wire_factor > 1.04
+    assert get_policy("hpcc_pint").wire_factor < 1.01
+
+
+def test_static_window_is_static_and_bdp_sized():
+    pol = make_static_window(margin=1.2, headroom=0.5e6)
+    st = _init(pol)
+    w0 = np.asarray(st["w"]).copy()
+    np.testing.assert_allclose(w0, 1.2 * LINE * 2e-6 + 0.5e6, rtol=1e-5)
+    st, rate, w = pol.update(pol.params, st, _sig(ecn=1.0, rtt=1.0, util=5.0))
+    np.testing.assert_allclose(np.asarray(w), w0, rtol=1e-6)  # no feedback
+
+
+def test_static_window_fanin_shares_port_budget():
+    pol = make_static_window(margin=2.0, headroom=1e6)
+    line = jnp.full((F,), LINE, jnp.float32)
+    fanin = jnp.asarray([1.0, 7.0, 56.0, 1.0], jnp.float32)
+    st = pol.init(F, line, line * 2e-6, fanin=fanin)
+    w = np.asarray(st["w"])
+    # aggregate in-flight at a port stays ~bounded regardless of fan-in
+    np.testing.assert_allclose(w[1] * 7, w[0], rtol=1e-5)
+    assert w[2] * 56 <= w[0] * 1.001
+
+
+@pytest.mark.parametrize("name", ALL_POLICIES)
+def test_all_policies_rates_bounded(name):
+    pol = get_policy(name)
+    st = _init(pol)
+    for i in range(50):
+        st, rate, win = pol.update(pol.params, st,
+                                   _sig(t=i * 1e-5, ecn=(i % 3 == 0) * 0.5,
+                                        rtt=2e-6 + (i % 5) * 1e-4, util=0.2 + i % 2))
+        r = np.asarray(rate)
+        assert np.all(r <= LINE * 1.0001), name
+        assert np.all(r > 0), name
+        assert np.all(np.isfinite(np.asarray(win))), name

@@ -1,0 +1,85 @@
+"""System layer: collective decomposition correctness."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.collectives import (allreduce_1d, allreduce_2d, alltoall,
+                                    collective_bytes_on_nics)
+from repro.core.topology import clos, single_switch
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return clos(n_racks=2, nodes_per_rack=2, gpus_per_node=4)
+
+
+def test_alltoall_total_bytes(topo):
+    gpus = list(range(16))
+    S = 64e6
+    sched = alltoall(topo, gpus, S)
+    # direct a2a moves (P-1)/P of the data per GPU -> total = S*(P-1)
+    np.testing.assert_allclose(sched.total_bytes(), S * 15, rtol=1e-6)
+
+
+def test_allreduce_1d_total_bytes(topo):
+    gpus = list(range(16))
+    S = 64e6
+    sched = allreduce_1d(topo, gpus, S)
+    # RS + AG, each (P-1)*S/P per GPU summed -> 2*S*(P-1)
+    np.testing.assert_allclose(sched.total_bytes(), 2 * S * 15, rtol=1e-6)
+
+
+def test_2d_sends_less_through_nics(topo):
+    gpus = list(range(16))
+    S = 64e6
+    b1 = collective_bytes_on_nics(allreduce_1d(topo, gpus, S), topo)
+    b2 = collective_bytes_on_nics(allreduce_2d(topo, gpus, S), topo)
+    assert b2 < b1 / 2.5, (b1, b2)  # the paper's F4 traffic claim
+
+
+def test_chunks_are_chained(topo):
+    sched = alltoall(topo, list(range(16)), 16e6, n_chunks=4)
+    # chunk c depends on chunk c-1
+    assert sched.n_groups == 4
+    deps = {}
+    for f in range(sched.n_flows):
+        deps.setdefault(sched.group[f], set()).add(sched.dep[f])
+    assert deps[0] == {-1}
+    for c in range(1, 4):
+        assert deps[c] == {c - 1}
+
+
+def test_2d_stage_chain(topo):
+    sched = allreduce_2d(topo, list(range(16)), 16e6, n_chunks=2)
+    names = sched.group_names
+    idx = {n: i for i, n in enumerate(names)}
+    for c in range(2):
+        for a, b in [("rs_local", "rs_xnode"), ("rs_xnode", "ag_xnode"),
+                     ("ag_xnode", "ag_local")]:
+            ga, gb = idx[f"c{c}_{a}"], idx[f"c{c}_{b}"]
+            deps_b = {sched.dep[f] for f in range(sched.n_flows)
+                      if sched.group[f] == gb}
+            assert deps_b == {ga}
+
+
+@given(st.integers(1, 3).map(lambda x: 2 ** x))
+@settings(max_examples=6, deadline=None)
+def test_property_a2a_bytes_scale(chunks):
+    topo = single_switch(8)
+    sched = alltoall(topo, list(range(8)), 8e6, n_chunks=chunks)
+    np.testing.assert_allclose(sched.total_bytes(), 8e6 * 7 / 8 * 8, rtol=1e-6)
+
+
+def test_ecmp_spreads_spine_choice():
+    topo = clos(n_racks=4, nodes_per_rack=2, gpus_per_node=4, n_spines=4)
+    sched = alltoall(topo, list(range(32)), 32e6, n_chunks=1)
+    spine_links = set(topo.meta["tor_up"].flatten().tolist())
+    used = {}
+    for f in range(sched.n_flows):
+        for l in sched.path[f]:
+            if int(l) in spine_links:
+                used[int(l)] = used.get(int(l), 0) + 1
+    # every TOR->spine uplink should carry some flows (ECMP balance)
+    assert len(used) == len(spine_links)
+    counts = np.asarray(list(used.values()))
+    assert counts.max() / max(counts.min(), 1) < 4

@@ -1,0 +1,56 @@
+"""Flash-attention custom VJP vs dense reference (fwd + grads)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.flash import flash_attention
+from repro.models.layers import dense_attention
+
+
+@pytest.mark.parametrize("S,bq,bk", [(256, 64, 64), (512, 128, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_forward(S, bq, bk, causal, key):
+    q = jax.random.normal(key, (2, S, 4, 32))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, S, 2, 32))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, S, 2, 32))
+    out = flash_attention(q, k, v, causal, bq, bk)
+    ref = dense_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_flash_grads_match_dense(key):
+    B, S, Hq, Hkv, D = 2, 256, 4, 2, 32
+    q = jax.random.normal(key, (B, S, Hq, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, Hkv, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, Hkv, D))
+
+    def loss_flash(q, k, v):
+        return (flash_attention(q, k, v, True, 64, 64) ** 2).sum()
+
+    def loss_dense(q, k, v):
+        return (dense_attention(q, k, v, causal=True) ** 2).sum()
+
+    g1 = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_dense, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_model_trains_with_flash(key):
+    """End-to-end grads through a flash-enabled reduced model."""
+    import dataclasses
+    from repro.configs import smoke_config
+    from repro.models.model_api import Model
+    # S must exceed the dense cutoff (1024) to exercise the flash path
+    cfg = dataclasses.replace(smoke_config("tinyllama-1.1b"),
+                              flash_attention=True, block_q=256, block_k=256)
+    m = Model(cfg)
+    params = m.init(key)
+    batch = {"tokens": jax.random.randint(key, (1, 2048), 0, cfg.vocab)}
+    loss, g = jax.jit(jax.value_and_grad(m.loss))(params, batch)
+    assert np.isfinite(float(loss))
+    for leaf in jax.tree.leaves(g):
+        assert np.all(np.isfinite(np.asarray(leaf, np.float32)))

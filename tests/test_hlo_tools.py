@@ -1,0 +1,79 @@
+"""HLO comm extraction + trip-count-aware counter (roofline instrument)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.hlo_comm import CollectiveOp, collective_link_bytes, extract, summarize
+from repro.core.hlo_counter import totals
+
+
+def _compile_text(f, *specs):
+    return jax.jit(f).lower(*specs).compile().as_text()
+
+
+def test_counter_scan_matmul_exact():
+    def f(x, w, w2):
+        def body(c, _):
+            return c @ w, None
+        y, _ = lax.scan(body, x, None, length=5)
+        return y @ w2
+
+    txt = _compile_text(
+        f,
+        jax.ShapeDtypeStruct((128, 256), jnp.float32),
+        jax.ShapeDtypeStruct((256, 256), jnp.float32),
+        jax.ShapeDtypeStruct((256, 512), jnp.float32))
+    t = totals(txt)
+    expect = 5 * 2 * 128 * 256 * 256 + 2 * 128 * 512 * 256
+    assert t.flops == expect
+
+
+def test_counter_nested_scan():
+    def f(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            c2, _ = lax.scan(inner, c, None, length=3)
+            return c2, None
+        y, _ = lax.scan(outer, x, None, length=4)
+        return y
+
+    txt = _compile_text(f, jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                        jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    t = totals(txt)
+    assert t.flops == 12 * 2 * 64 * 64 * 64
+
+
+def test_counter_batched_dot():
+    def f(x, w):
+        return jnp.einsum("bij,bjk->bik", x, w)
+    txt = _compile_text(f, jax.ShapeDtypeStruct((8, 32, 64), jnp.float32),
+                        jax.ShapeDtypeStruct((8, 64, 16), jnp.float32))
+    t = totals(txt)
+    assert t.flops == 2 * 8 * 32 * 16 * 64
+
+
+def test_extract_parses_collectives():
+    hlo = """
+  %ar = f32[1024,512]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag.1 = bf16[64,128]{1,0} all-gather(%y), replica_groups=[16,16], dimensions={0}
+  %a2a = f32[32]{0} all-to-all(%z), replica_groups={{0,1},{2,3}}
+"""
+    ops = extract(hlo)
+    kinds = {o.kind for o in ops}
+    assert kinds == {"all-reduce", "all-gather", "all-to-all"}
+    ar = [o for o in ops if o.kind == "all-reduce"][0]
+    assert ar.bytes_total == 1024 * 512 * 4
+    assert ar.group_size == 4
+    ag = [o for o in ops if o.kind == "all-gather"][0]
+    assert ag.group_size == 16 and ag.n_groups == 16
+
+
+def test_summarize_and_link_bytes():
+    ops = [CollectiveOp("all-reduce", 1000, 4, 1),
+           CollectiveOp("all-gather", 1000, 4, 1)]
+    s = summarize(ops)
+    assert s["total"] == 2000
+    lb = collective_link_bytes(ops)
+    np.testing.assert_allclose(lb, 1000 * 2 * 3 / 4 + 1000 * 3 / 4)

@@ -1,0 +1,103 @@
+"""Attention-core equivalences: every fast path vs the dense reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+
+
+def _qkv(key, B, S, Hq, Hkv, D, dtype=jnp.float32):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, S, Hq, D), dtype)
+    k = jax.random.normal(kk, (B, S, Hkv, D), dtype)
+    v = jax.random.normal(kv, (B, S, Hkv, D), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("S,block", [(256, 64), (512, 128)])
+@pytest.mark.parametrize("softcap", [None, 20.0])
+def test_blockwise_matches_dense(S, block, softcap):
+    q, k, v = _qkv(jax.random.PRNGKey(0), 2, S, 4, 2, 32)
+    ref = L.dense_attention(q, k, v, causal=True, softcap=softcap)
+    out = L.blockwise_attention(q, k, v, causal=True, softcap=softcap,
+                                block_q=block, block_k=block, split_wedge=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("S", [2048, 4096])
+def test_wedge_matches_dense(S):
+    q, k, v = _qkv(jax.random.PRNGKey(1), 1, S, 2, 1, 16)
+    ref = L.dense_attention(q, k, v, causal=True)
+    out = L.blockwise_attention(q, k, v, causal=True, block_q=256, block_k=256,
+                                split_wedge=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-5, atol=3e-5)
+
+
+def test_prefix_lm_mask():
+    q, k, v = _qkv(jax.random.PRNGKey(2), 2, 64, 2, 1, 16)
+    out = L.dense_attention(q, k, v, causal=True, prefix_len=16)
+    # token 0 must attend tokens 0..15 (bidirectional prefix): differs from causal
+    causal = L.dense_attention(q, k, v, causal=True)
+    assert not np.allclose(np.asarray(out[:, 0]), np.asarray(causal[:, 0]))
+    # last token: same receptive field either way
+    np.testing.assert_allclose(np.asarray(out[:, -1]), np.asarray(causal[:, -1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("S,W", [(256, 64), (300, 128)])
+def test_local_matches_dense_window(S, W):
+    q, k, v = _qkv(jax.random.PRNGKey(3), 2, S, 4, 2, 32)
+    ref = L.dense_attention(q, k, v, causal=True, window=W)
+    out = L.local_attention(q, k, v, window=W)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_decode_matches_dense_last_token():
+    B, S, Hq, Hkv, D = 2, 128, 4, 2, 32
+    q, k, v = _qkv(jax.random.PRNGKey(4), B, S, Hq, Hkv, D)
+    ref = L.dense_attention(q, k, v, causal=True)[:, -1:]
+    out = L.decode_attention(q[:, -1:], k, v, length=jnp.asarray(S))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_decode_respects_length_mask():
+    B, S = 1, 64
+    q, k, v = _qkv(jax.random.PRNGKey(5), B, S, 2, 2, 16)
+    out_40 = L.decode_attention(q[:, -1:], k, v, length=jnp.asarray(40))
+    # the decode query attends exactly keys [0, length)
+    ref = L.dense_attention(q[:, -1:], k[:, :40], v[:, :40], causal=False)
+    np.testing.assert_allclose(np.asarray(out_40), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+@given(st.integers(2, 6).map(lambda x: 2 ** x))
+@settings(max_examples=8, deadline=None)
+def test_rope_preserves_norm(dim):
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 2, dim))
+    pos = jnp.arange(8)[None]
+    y = L.apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-4)
+
+
+def test_rope_relative_property():
+    """<rope(q,m), rope(k,n)> depends only on m-n."""
+    D = 32
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, D))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, D))
+
+    def score(m, n):
+        qm = L.apply_rope(q, jnp.asarray([[m]]), 10000.0)
+        kn = L.apply_rope(k, jnp.asarray([[n]]), 10000.0)
+        return float(jnp.sum(qm * kn))
+
+    assert abs(score(5, 3) - score(10, 8)) < 1e-4
+    assert abs(score(7, 7) - score(0, 0)) < 1e-4
+
+
+def test_softcap_bounds():
+    x = jnp.linspace(-1000, 1000, 101)
+    y = L._softcap(x, 30.0)
+    assert float(jnp.max(jnp.abs(y))) <= 30.0 + 1e-5

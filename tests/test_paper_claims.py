@@ -1,0 +1,120 @@
+"""The reproduction gate: the paper's findings F1-F6 (DESIGN.md §1) at
+test-sized scale.  Heavier full-scale runs live in benchmarks/."""
+import numpy as np
+import pytest
+
+from repro.core.cc import get_policy
+from repro.core.collectives import allreduce_1d, allreduce_2d, alltoall, incast
+from repro.core.engine import EngineConfig, simulate
+from repro.core.topology import clos, single_switch
+from repro.core.workload import DLRMCommSpec, simulate_dlrm_iteration
+
+CFG = EngineConfig(dt=1e-6, max_steps=2000, max_extends=5)
+
+
+@pytest.fixture(scope="module")
+def incast_results():
+    topo = single_switch(8)
+    sched = incast(topo, list(range(1, 8)), 0, 10e6)
+    return {name: simulate(topo, sched, get_policy(name), CFG)
+            for name in ("pfc", "dcqcn", "dctcp", "timely", "hpcc",
+                         "hpcc_pint", "static_window")}
+
+
+def test_f1_pfc_queue_rides_threshold_many_pauses(incast_results):
+    r = incast_results["pfc"]
+    q = r.dev_queue[:, 8]
+    assert q.max() > 5e6            # queue held high
+    assert r.pause_count.sum() > 50  # "a lot of PFCs"
+    assert r.completion_time <= 7 * 10e6 / 25e9 * 1.01  # optimal for long flows
+
+
+def test_f1_ccs_eliminate_pauses(incast_results):
+    for name in ("dcqcn", "dctcp", "timely", "hpcc", "static_window"):
+        assert incast_results[name].pause_count.sum() == 0, name
+
+
+def test_f1_dctcp_drains_queue(incast_results):
+    q = incast_results["dctcp"].dev_queue[:, 8]
+    assert q.max() < 1e6  # small stable queue after initial buildup
+
+
+def test_f1_timely_overthrottles(incast_results):
+    """TIMELY: lowest queues but worst latency (paper Fig 3 discussion)."""
+    t = incast_results["timely"]
+    others = [incast_results[n].completion_time
+              for n in ("pfc", "dcqcn", "dctcp", "hpcc", "static_window")]
+    assert t.completion_time > max(others)
+    assert t.dev_queue[:, 8].max() < incast_results["pfc"].dev_queue[:, 8].max()
+
+
+def test_f1_hpcc_near_zero_queue(incast_results):
+    q = incast_results["hpcc"].dev_queue[:, 8]
+    assert q.max() < 0.5e6
+
+
+@pytest.fixture(scope="module")
+def clos_topo():
+    return clos(n_racks=2, nodes_per_rack=2, gpus_per_node=4)  # 16 GPUs
+
+
+def test_f2_single_switch_collectives_no_congestion():
+    topo = single_switch(8)
+    gpus = list(range(8))
+    times = {}
+    for name in ("pfc", "dcqcn", "dctcp", "hpcc"):
+        r = simulate(topo, alltoall(topo, gpus, 10e6), get_policy(name), CFG)
+        assert r.finished
+        assert r.pause_count.sum() == 0, name       # no congestion -> no PFCs
+        times[name] = r.completion_time
+    spread = max(times.values()) / min(times.values()) - 1
+    assert spread < 0.12, times                      # all CCs ~equal
+
+
+def test_f3_four_chunks_four_peaks(clos_topo):
+    gpus = list(range(16))
+    r = simulate(clos_topo, alltoall(clos_topo, gpus, 64e6, n_chunks=4),
+                 get_policy("pfc"), CFG)
+    assert r.finished
+    # four chunk groups complete strictly in order
+    gt = r.group_time
+    assert all(gt[i] < gt[i + 1] for i in range(3))
+
+
+def test_f4_2d_much_faster_and_fewer_pauses(clos_topo):
+    gpus = list(range(16))
+    r1 = simulate(clos_topo, allreduce_1d(clos_topo, gpus, 128e6),
+                  get_policy("pfc"), CFG)
+    r2 = simulate(clos_topo, allreduce_2d(clos_topo, gpus, 128e6),
+                  get_policy("pfc"), CFG)
+    assert r1.finished and r2.finished
+    assert r2.completion_time < r1.completion_time / 2
+    assert r2.pause_count.sum() < r1.pause_count.sum() / 2
+
+
+def test_f5_dlrm_e2e_ordering(clos_topo):
+    gpus = list(range(16))
+    cfg = EngineConfig(dt=2e-6, max_steps=2000, max_extends=5)
+    reps = {name: simulate_dlrm_iteration(clos_topo, gpus, get_policy(name),
+                                          comm=DLRMCommSpec(), cfg=cfg)
+            for name in ("pfc", "dcqcn", "dctcp", "hpcc", "static_window")}
+    for name, rep in reps.items():
+        assert rep.finished, name
+    base = reps["pfc"].iteration_time
+    # paper: PFC-only gives best-or-equal e2e; HPCC hurt by INT overhead
+    assert reps["hpcc"].iteration_time >= base
+    assert reps["dctcp"].iteration_time <= base * 1.1
+    assert reps["dcqcn"].iteration_time <= base * 1.25
+
+
+def test_f6_static_window_matches_pfc_with_no_pauses(clos_topo):
+    """The paper's §IV-E proposed CC, implemented (beyond-paper)."""
+    gpus = list(range(16))
+    cfg = EngineConfig(dt=2e-6, max_steps=2000, max_extends=5)
+    pfc = simulate_dlrm_iteration(clos_topo, gpus, get_policy("pfc"), cfg=cfg)
+    sw = simulate_dlrm_iteration(clos_topo, gpus, get_policy("static_window"),
+                                 cfg=cfg)
+    assert sw.finished
+    assert sw.iteration_time <= pfc.iteration_time * 1.1   # same performance
+    assert sw.pfc_pauses == 0                              # ~zero PAUSE frames
+    assert pfc.pfc_pauses > 0
