@@ -1,0 +1,174 @@
+"""Fluid-engine performance benchmark: warm steps/sec, sweep throughput,
+and per-figure-scenario wall time.  Writes BENCH_engine.json.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_engine.py [--smoke] [--out PATH]
+
+``--smoke`` runs one warm repetition of the headline scenario only (CI-
+friendly, ~15 s including compile); the full run adds the per-figure
+scenario timings and a vmap sweep-throughput measurement.
+
+The committed BENCH_engine.json demonstrates the PR-2 acceptance gate:
+warm wall-clock of the headline scenario (32-GPU CLOS 1D All-Reduce,
+dt=2e-6, max_steps=4000, max_extends=6, DCQCN) vs the seed engine.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import jax
+
+from repro.core.cc import get_policy
+from repro.core.collectives import allreduce_1d, alltoall, incast
+from repro.core.engine import EngineConfig, Simulator
+from repro.core.sweep import SweepRunner
+from repro.core.topology import clos, single_switch
+
+# Seed-engine baseline for the headline scenario, measured on the dev
+# container (2-core CPU, jax 0.4.x) immediately before the PR-2 rewrite:
+# warm Simulator.run() of clos(2,2,8) allreduce_1d(32 GPUs, 32 MB) under
+# DCQCN with EngineConfig(dt=2e-6, max_steps=4000, max_extends=6) took
+# 46.8 s (cold 48.2 s), i.e. ~85 steps/s.  Override with --seed-warm-s
+# when re-baselining on different hardware.
+SEED_WARM_S = 46.8
+
+
+def headline_case():
+    topo = clos(n_racks=2, nodes_per_rack=2, gpus_per_node=8)
+    sched = allreduce_1d(topo, list(range(32)), 32e6)
+    cfg = EngineConfig(dt=2e-6, max_steps=4000, max_extends=6, queue_stride=0)
+    return topo, sched, cfg
+
+
+def bench_headline(reps: int) -> dict:
+    topo, sched, cfg = headline_case()
+    sim = Simulator(topo, sched, get_policy("dcqcn"), cfg)
+    t0 = time.time()
+    r = sim.run()
+    cold = time.time() - t0
+    warm = []
+    for _ in range(reps):
+        t0 = time.time()
+        r = sim.run()
+        warm.append(time.time() - t0)
+    warm_s = min(warm)
+    steps = r.meta["steps_run"]
+    return {
+        "scenario": "clos32_ar1d_dcqcn dt=2e-6 max_steps=4000 max_extends=6",
+        "n_flows": sched.n_flows,
+        "finished": r.finished,
+        "completion_time_s": r.completion_time,
+        "cold_s": round(cold, 3),
+        "warm_s": round(warm_s, 3),
+        "warm_reps": warm,
+        "steps_run": steps,
+        "steps_per_s": round(steps / warm_s, 1),
+    }
+
+
+def bench_sweep(B: int = 8) -> dict:
+    """vmap throughput on the autotune-regime scenario (small fabric, short
+    step budget): B DCQCN parameter sets in one compiled call vs the same
+    B run serially.  On CPU the batched path wins where per-op dispatch
+    dominates (small/medium scenarios — exactly the population-tuning and
+    grid-sweep use cases); huge gather-bound scenarios prefer serial runs.
+    """
+    import numpy as np
+    topo = clos(n_racks=1, nodes_per_rack=2, gpus_per_node=4)   # 8 GPUs
+    sched = allreduce_1d(topo, list(range(8)), 8e6)
+    cfg = EngineConfig(dt=1e-6, max_steps=2500, max_extends=0, queue_stride=0)
+    runner = SweepRunner(cfg)
+    policy = get_policy("dcqcn")
+    scale = np.linspace(0.5, 2.0, B).astype(np.float32)
+    stacked = {"rai_frac": 0.03 * scale, "timer": 55e-6 * scale}
+    t0 = time.time()
+    batch = runner.run_batch(topo, sched, policy, stacked)
+    cold = time.time() - t0
+    t0 = time.time()
+    batch = runner.run_batch(topo, sched, policy, stacked)
+    warm = time.time() - t0
+    sim = runner.simulator(topo, sched, policy, cfg)
+    t0 = time.time()
+    for i in range(B):
+        sim.run(cc_params=batch.param_set(i))
+    serial = time.time() - t0
+    return {
+        "scenario": "clos8_ar1d dcqcn param sweep (autotune regime)",
+        "batch": B,
+        "cold_s": round(cold, 3),
+        "warm_s": round(warm, 3),
+        "warm_s_per_member": round(warm / B, 4),
+        "serial_s_same_params": round(serial, 3),
+        "vmap_speedup_vs_serial": round(serial / warm, 1),
+        "all_finished": bool(batch.finished.all()),
+    }
+
+
+def bench_figures() -> dict:
+    """Warm wall time of small-scale versions of the figure scenarios."""
+    out = {}
+    cases = {
+        "fig3_incast": (single_switch(8), None, "dcqcn",
+                        EngineConfig(dt=1e-6, max_steps=2000, max_extends=6)),
+        "fig5_7_clos_a2a": (clos(2, 2, 8), "a2a", "dcqcn",
+                            EngineConfig(dt=2e-6, max_steps=4000,
+                                         max_extends=6)),
+        "fig8_clos_ar1d": (clos(2, 2, 8), "ar1d", "hpcc",
+                           EngineConfig(dt=2e-6, max_steps=4000,
+                                        max_extends=6, queue_stride=0)),
+    }
+    for tag, (topo, kind, pol, cfg) in cases.items():
+        if kind == "a2a":
+            sched = alltoall(topo, list(range(topo.n_gpus)), 32e6)
+        elif kind == "ar1d":
+            sched = allreduce_1d(topo, list(range(topo.n_gpus)), 32e6)
+        else:
+            sched = incast(topo, list(range(1, 8)), 0, 10e6)
+        sim = Simulator(topo, sched, get_policy(pol), cfg)
+        r = sim.run()
+        t0 = time.time()
+        r = sim.run()
+        warm = time.time() - t0
+        out[tag] = {"policy": pol, "warm_s": round(warm, 3),
+                    "steps_run": r.meta["steps_run"],
+                    "finished": r.finished}
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="headline scenario only, one warm rep")
+    ap.add_argument("--out", default="BENCH_engine.json")
+    ap.add_argument("--seed-warm-s", type=float, default=SEED_WARM_S)
+    args = ap.parse_args()
+
+    report = {
+        "env": {"platform": platform.platform(),
+                "jax": jax.__version__,
+                "devices": [str(d) for d in jax.devices()]},
+        "seed_baseline": {
+            "warm_s": args.seed_warm_s,
+            "note": "PR-1 seed engine, same scenario/config, measured on "
+                    "the dev container before the PR-2 hot-path rewrite",
+        },
+    }
+    report["headline"] = bench_headline(reps=1 if args.smoke else 3)
+    report["speedup_vs_seed"] = round(
+        args.seed_warm_s / report["headline"]["warm_s"], 1)
+    if not args.smoke:
+        report["sweep_vmap"] = bench_sweep()
+        report["figure_scenarios"] = bench_figures()
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(json.dumps(report, indent=1))
+    print(f"\nwrote {args.out}; speedup vs seed engine: "
+          f"{report['speedup_vs_seed']}x")
+
+
+if __name__ == "__main__":
+    main()

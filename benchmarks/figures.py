@@ -7,8 +7,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (collective_size, downsample, emit, engine_cfg,
-                               paper_clos, run_cached, save_json)
+from benchmarks.common import (RUNNER, collective_size, downsample, emit,
+                               engine_cfg, paper_clos, run_cached, save_json)
 from repro.core.cc import ALL_POLICIES, get_policy
 from repro.core.collectives import allreduce_1d, allreduce_2d, alltoall, incast
 from repro.core.engine import EngineConfig
@@ -86,7 +86,7 @@ def fig8_completion():
     """Fig 8: completion time of 1D/2D All-Reduce + All-To-All per CC."""
     topo, n = paper_clos()
     size = collective_size()
-    cfg = engine_cfg()
+    cfg = engine_cfg(queue_stride=0)   # no timeline consumed
     rows = []
     scheds = {
         "ar_1d": allreduce_1d(topo, list(range(n)), size),
@@ -108,7 +108,7 @@ def fig9_pfc_counts():
     """Fig 9: PAUSE-frame counts per workload per CC."""
     topo, n = paper_clos()
     size = collective_size()
-    cfg = engine_cfg()
+    cfg = engine_cfg(queue_stride=0)
     rows = []
     scheds = {
         "ar_1d": ("clos_ar_1d", allreduce_1d(topo, list(range(n)), size)),
@@ -126,14 +126,15 @@ def fig9_pfc_counts():
 def fig10_dlrm_e2e():
     """Fig 10: DLRM iteration = compute + exposed comm, per CC x {1D,2D}."""
     topo, n = paper_clos()
-    cfg = engine_cfg()
+    cfg = engine_cfg(queue_stride=0)
     rows = []
     report = {}
     for algo in ("2d", "1d"):
         for pol in ALL_POLICIES:
             rep = simulate_dlrm_iteration(
                 topo, list(range(n)), get_policy(pol),
-                comm=DLRMCommSpec(allreduce_algo=algo), cfg=cfg)
+                comm=DLRMCommSpec(allreduce_algo=algo), cfg=cfg,
+                runner=RUNNER)
             rows.append(("fig10", f"dlrm_{algo}_iter_ms", pol,
                          round(rep.iteration_time * 1e3, 4)))
             rows.append(("fig10", f"dlrm_{algo}_exposed_ms", pol,
@@ -150,15 +151,17 @@ def fig10_dlrm_e2e():
 def fig11_static_window():
     """Beyond-paper: the paper's §IV-E proposed static-window CC vs PFC."""
     topo, n = paper_clos()
-    cfg = engine_cfg()
+    cfg = engine_cfg(queue_stride=0)
     rows = []
     for algo in ("2d",):
         pfc = simulate_dlrm_iteration(topo, list(range(n)),
                                       get_policy("pfc"),
-                                      comm=DLRMCommSpec(allreduce_algo=algo), cfg=cfg)
+                                      comm=DLRMCommSpec(allreduce_algo=algo),
+                                      cfg=cfg, runner=RUNNER)
         sw = simulate_dlrm_iteration(topo, list(range(n)),
                                      get_policy("static_window"),
-                                     comm=DLRMCommSpec(allreduce_algo=algo), cfg=cfg)
+                                     comm=DLRMCommSpec(allreduce_algo=algo),
+                                     cfg=cfg, runner=RUNNER)
         rows.append(("fig11", "pfc_iter_ms", "pfc", round(pfc.iteration_time * 1e3, 4)))
         rows.append(("fig11", "sw_iter_ms", "static_window",
                      round(sw.iteration_time * 1e3, 4)))

@@ -21,8 +21,10 @@ def main():
     sched = incast(topo, list(range(1, 8)), 0, 10e6)
     cfg = EngineConfig(dt=2e-6, max_steps=2200, max_extends=0)
 
+    # population-based: 4 jittered members descend in ONE vmapped
+    # simulation per step; member 0 is the paper-default parameterisation
     res = autotune(topo, sched, make_dcqcn(), ["rai_frac", "rhai_frac", "g"],
-                   steps=10, lr=0.25, cfg=cfg)
+                   steps=10, lr=0.25, cfg=cfg, population=4)
     print("history (soft cost = integral of undelivered fraction):")
     for h in res.history:
         print("  step %2d cost %.6f rai=%.4f rhai=%.4f g=%.5f"

@@ -19,7 +19,8 @@ import os
 
 from repro.core.cc import get_policy
 from repro.core.collectives import allreduce_2d, alltoall, ScheduleBuilder
-from repro.core.engine import EngineConfig, simulate
+from repro.core.engine import EngineConfig
+from repro.core.sweep import SweepRunner
 from repro.core.topology import clos
 
 POLICIES = ("pfc", "dcqcn", "dctcp", "timely", "hpcc", "static_window")
@@ -58,7 +59,10 @@ def build_equiv_schedule(topo, n, ar_bytes_per_gpu, a2a_bytes_per_gpu):
 def main():
     topo = clos(n_racks=4, nodes_per_rack=2, gpus_per_node=8)  # 64 GPUs
     n = 64
-    cfg = EngineConfig(dt=4e-6, max_steps=4000, max_extends=6)
+    cfg = EngineConfig(dt=4e-6, max_steps=4000, max_extends=6, queue_stride=0)
+    # one runner across all archs: equal-shaped schedules (same topo, same
+    # chunking) hit the same compiled engine instead of retracing per arch
+    runner = SweepRunner(cfg)
     files = sorted(glob.glob("experiments/dryrun/*_train_4k_sp.json"))
     if not files:
         print("no dry-run artifacts; run: python -m repro.launch.dryrun --all")
@@ -81,7 +85,7 @@ def main():
             for sched in (sar, sa2a):
                 if sched is None:
                     continue
-                r = simulate(topo, sched, get_policy(pol), cfg)
+                r = runner.run(topo, sched, get_policy(pol))
                 t += r.completion_time if r.finished else float("nan")
             times.append(t)
         base = times[0]

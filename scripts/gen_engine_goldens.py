@@ -1,0 +1,50 @@
+"""Regenerate tests/golden/engine_seed.json (engine equivalence goldens).
+
+The stored file was produced by the PR-1 seed engine (per-hop scatter-add
+loop, fixed 512-slot history ring, host-synced segment extends); the
+rewritten engine must reproduce completion_time / t_finish / pause_count
+for these scenarios within the tolerances in tests/test_engine_equiv.py.
+Run this script only to re-baseline after an *intentional* physics change.
+"""
+import json
+import os
+import sys
+
+import numpy as np
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, os.path.join(_ROOT, "tests"))
+
+from _engine_scenarios import scenarios  # noqa: E402
+
+from repro.core.cc import get_policy  # noqa: E402
+from repro.core.engine import simulate  # noqa: E402
+
+
+def main():
+    out = {}
+    for tag, topo, sched, pols, cfg in scenarios():
+        for pol in pols:
+            r = simulate(topo, sched, get_policy(pol), cfg)
+            t_fin = np.asarray(r.t_finish, np.float64)
+            out[f"{tag}/{pol}"] = {
+                "finished": bool(r.finished),
+                "completion_time": float(r.completion_time),
+                "t_finish": [None if not np.isfinite(v) else float(v)
+                             for v in t_fin],
+                "pause_count": [float(v) for v in np.asarray(r.pause_count)],
+                "delivered_sum": float(np.asarray(r.delivered).sum()),
+                "cfg": {"dt": cfg.dt, "max_steps": cfg.max_steps,
+                        "max_extends": cfg.max_extends},
+            }
+            print(tag, pol, "ct=", out[f"{tag}/{pol}"]["completion_time"],
+                  flush=True)
+    path = os.path.join(_ROOT, "tests", "golden", "engine_seed.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print("wrote", path)
+
+
+if __name__ == "__main__":
+    main()

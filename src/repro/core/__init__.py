@@ -8,4 +8,5 @@ from repro.core.collectives import (  # noqa: F401
     incast,
 )
 from repro.core.engine import EngineConfig, Results, Simulator, simulate  # noqa: F401
+from repro.core.sweep import BatchResults, SweepRunner  # noqa: F401
 from repro.core.topology import clos, single_switch  # noqa: F401

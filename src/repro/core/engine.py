@@ -18,11 +18,42 @@ Per step Δt:
 
 The engine is differentiable w.r.t. CC policy parameters: `soft_cost`
 integrates the undelivered fraction over time (see core/autotune.py).
+
+Hot path
+--------
+All per-link reductions (hop demand, queue occupancy, PFC port pressure,
+group completion counts) go through *static gather plans* built once in
+``_prep``: flow->link membership is known ahead of time, so each reduction
+is a padded gather + row-sum over a precomputed ``(segments, Cmax)`` index
+matrix instead of an XLA scatter-add (an order of magnitude faster on CPU;
+pathological fan-ins fall back to scatter, chosen statically per scenario).
+The feedback history ring is sized to the actual maximum ``delay_steps``
+(next power of two) rather than a fixed ``cfg.hist`` slots.
+
+Early-exit semantics
+--------------------
+``Simulator.run`` integrates ``max_steps * (max_extends + 1)`` total steps,
+but inside one jitted call: a ``lax.while_loop`` over ``cfg.chunk_steps``-
+sized ``lax.scan`` chunks stops as soon as every flow has completed, and
+each step is additionally gated on ``done.all()`` via ``lax.cond`` so the
+tail of the final chunk costs ~nothing.  Because finished steps are exact
+no-ops, an early-exited run is *bitwise identical* to a monolithic scan of
+the full step budget (``run(early_exit=False)``), and results never depend
+on ``chunk_steps``.  The carry is donated to the compiled call.
+
+The per-device queue timeline (``Results.dev_queue``, consumed only by the
+Fig 5-7 style plots) is recorded every ``cfg.queue_stride`` steps, or not
+at all with ``queue_stride=0`` — the recommended setting for sweeps.
+
+Batched sweeps over CC parameters (vmap) and the cross-scenario compile
+cache live in ``repro.core.sweep`` (``SweepRunner``); compiled step
+functions here are keyed on ``(policy, cfg, static plan)`` so same-shaped
+scenarios never retrace.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import inspect
 
 import jax
 import jax.numpy as jnp
@@ -38,8 +69,8 @@ from repro.core.topology import MAXHOP, Topology
 class EngineConfig:
     dt: float = 1e-6
     max_steps: int = 20_000
-    max_extends: int = 4          # re-run segments until all flows finish
-    hist: int = 512               # feedback delay ring (steps)
+    max_extends: int = 4          # extra step budget: total = max_steps*(1+extends)
+    hist: int = 512               # feedback delay ring cap (steps)
     # ECN / RED marking at switch egress queues
     kmin: float = 400e3
     kmax: float = 1600e3
@@ -51,6 +82,9 @@ class EngineConfig:
     t_base_util: float = 10e-6    # HPCC qlen->util horizon
     eps_done: float = 512.0       # completion slack (bytes)
     pause_resend: float = 5e-6    # PAUSE frame refresh while a port is paused
+    # hot-path knobs (do not change simulated physics)
+    chunk_steps: int = 256        # early-exit check granularity (in-jit)
+    queue_stride: int = 1         # record dev_queue every k steps; 0 = off
 
 
 @dataclasses.dataclass
@@ -61,15 +95,139 @@ class Results:
     group_time: np.ndarray        # (G,)
     group_names: list
     pause_count: np.ndarray       # (D,) PFC pause transitions per device
-    dev_queue: np.ndarray         # (T, D) per-device queue bytes timeline
+    dev_queue: np.ndarray         # (T//queue_stride, D) queue-bytes timeline
     dt: float
     delivered: np.ndarray
     soft_cost: float
     meta: dict
 
 
-def _prep(topo: Topology, sched: Schedule, cfg: EngineConfig):
+# ---------------------------------------------------------------------------
+# static gather plans (scatter-free segment reductions)
+# ---------------------------------------------------------------------------
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length() if n > 1 else 1
+
+
+# single-level padded-gather width cap: segments with more members than
+# this use the two-level split-row plan so one hot port (e.g. a full-fabric
+# incast) cannot inflate the gather to n_out * max_count slots
+_SPLIT_C = 64
+
+
+def _padded_rows(kept_ids, kept_pos, counts, n_out, n_in, width):
+    """(n_out, width) index matrix; slot ``n_in`` means "+0" (OOB fill)."""
+    idx = np.full((n_out, width), n_in, np.int64)
+    order = np.argsort(kept_ids, kind="stable")
+    sid = kept_ids[order]
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    slot = np.arange(len(sid)) - starts[sid]
+    idx[sid, slot] = kept_pos[order]
+    return idx
+
+
+def _reduce_plan(ids: np.ndarray, n_in: int, n_out: int,
+                 drop: np.ndarray | None = None):
+    """Build a static plan for ``out[s] = sum(vals[ids == s])``.
+
+    Entries with ``drop`` True (provably-zero contributions: padding flows,
+    unused hop slots) are excluded.  Returns ``(arrays, strategy)`` where
+    ``strategy`` is hashable and ``arrays`` ride along in ``pp``.
+
+    Three strategies, chosen statically from the (known) fan-in histogram:
+      empty    no live entries — the reduction is identically zero
+      gather   (n_out, C) padded gather + row sum, C = max segment size
+      gather2  split-row: each segment padded to a multiple of _SPLIT_C,
+               one flat gather + block sum, then a tiny second-level
+               padded gather over per-block partial sums
+    """
+    ids = np.asarray(ids, np.int64).reshape(-1)
+    keep = np.ones(ids.shape, bool) if drop is None else ~np.asarray(drop).reshape(-1)
+    kept_ids = ids[keep]
+    kept_pos = np.nonzero(keep)[0]
+    if kept_ids.size == 0:
+        return {}, ("empty", n_out)
+    counts = np.bincount(kept_ids, minlength=n_out)
+    C = _next_pow2(int(counts.max()))
+    if C <= _SPLIT_C:
+        idx = _padded_rows(kept_ids, kept_pos, counts, n_out, n_in, C)
+        return {"idx": jnp.asarray(idx.reshape(-1), jnp.int32)}, \
+            ("gather", n_out, C)
+    # split-row: block-align each segment to _SPLIT_C-wide sub-rows
+    nblk = -(-counts // _SPLIT_C)                  # ceil; 0 for empty segments
+    blk_start = np.concatenate([[0], np.cumsum(nblk)])
+    n_blocks = int(blk_start[-1])
+    perm = np.full(n_blocks * _SPLIT_C, n_in, np.int64)
+    order = np.argsort(kept_ids, kind="stable")
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    for s in np.nonzero(counts)[0]:
+        lo = blk_start[s] * _SPLIT_C
+        perm[lo:lo + counts[s]] = kept_pos[order[starts[s]:starts[s] + counts[s]]]
+    C2 = _next_pow2(int(nblk.max()))
+    bidx = np.full((n_out, C2), n_blocks, np.int64)
+    for s in np.nonzero(nblk)[0]:
+        bidx[s, :nblk[s]] = np.arange(blk_start[s], blk_start[s + 1])
+    return {"perm": jnp.asarray(perm, jnp.int32),
+            "bidx": jnp.asarray(bidx.reshape(-1), jnp.int32)}, \
+        ("gather2", n_out, n_blocks, C2)
+
+
+def _reduce(strategy, arrs, vals):
+    """Apply a ``_reduce_plan``: (n_in,) vals -> (n_out,) segment sums."""
+    kind = strategy[0]
+    if kind == "empty":
+        return jnp.zeros((strategy[1],), vals.dtype)
+    if kind == "gather":
+        _, n_out, C = strategy
+        rows = vals.at[arrs["idx"]].get(mode="fill", fill_value=0.0)
+        return rows.reshape(n_out, C).sum(axis=1)
+    _, n_out, n_blocks, C2 = strategy
+    sub = vals.at[arrs["perm"]].get(mode="fill", fill_value=0.0)
+    bsum = sub.reshape(n_blocks, _SPLIT_C).sum(axis=1)
+    rows = bsum.at[arrs["bidx"]].get(mode="fill", fill_value=0.0)
+    return rows.reshape(n_out, C2).sum(axis=1)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Plan:
+    """Hashable static description of one prepared scenario.
+
+    Everything shape- or strategy-like lives here (part of the compile
+    cache key); everything array-like lives in ``pp`` (traced, so two
+    scenarios with equal plans share one compiled executable).
+    """
+    n_flows: int                  # real flows (pre-padding)
+    n_flows_pad: int
+    n_groups: int
+    n_groups_pad: int
+    n_links: int
+    n_dev: int
+    ring: int                     # feedback history slots (pow2)
+    hop: tuple                    # per-hop demand reduction strategies
+    qlink: tuple
+    qport: tuple
+    group: tuple
+    pause: tuple
+    qdev: tuple
+
+
+def _prep(topo: Topology, sched: Schedule, cfg: EngineConfig,
+          pad_flows: int | None = None, pad_groups: int | None = None):
+    """Precompute static per-flow/per-link arrays + gather plans.
+
+    ``pad_flows`` / ``pad_groups`` pad the flow and group axes with inert
+    entries (done at t=0, zero bytes, null links) so that differently-sized
+    schedules can share one compiled executable (shape-bucket padding; see
+    ``repro.core.sweep``).  Padding never changes simulated physics: padded
+    flows are excluded from every reduction plan and start out done.
+    """
     Lk = topo.n_links
+    F = sched.n_flows
+    G = sched.n_groups
+    Fp = max(pad_flows or F, F)
+    Gp = max(pad_groups or G, G)
+
     path = np.where(sched.path < 0, Lk, sched.path).astype(np.int32)
     cap = np.concatenate([topo.cap, [1e18]]).astype(np.float32)
     lat = np.concatenate([topo.lat, [0.0]]).astype(np.float32)
@@ -90,7 +248,7 @@ def _prep(topo: Topology, sched: Schedule, cfg: EngineConfig):
     # only same-group flows contend — exactly the knowledge the paper says
     # an optimized CC should exploit (§IV-E).
     link_load = np.zeros(Lk + 1, np.float64)
-    for g in range(max(sched.n_groups, 1)):
+    for g in range(max(G, 1)):
         in_g = (sched.group == g) & (sched.size > 0)
         if not in_g.any():
             continue
@@ -99,7 +257,7 @@ def _prep(topo: Topology, sched: Schedule, cfg: EngineConfig):
             np.add.at(load_g, path[in_g, h], 1.0)
         link_load = np.maximum(link_load, load_g)
     link_load[Lk] = 1.0
-    fanin = np.ones(sched.n_flows, np.float64)
+    fanin = np.ones(F, np.float64)
     for h in range(path.shape[1]):
         valid = sched.path[:, h] >= 0
         fanin = np.maximum(fanin, np.where(valid, link_load[path[:, h]], 1.0))
@@ -112,74 +270,138 @@ def _prep(topo: Topology, sched: Schedule, cfg: EngineConfig):
     first = path[:, 0]
     line = cap[first].astype(np.float32)
     bdp = (line * base_rtt).astype(np.float32)
-    gsize = np.zeros(sched.n_groups, np.float32)
+    gsize = np.zeros(G, np.float32)
     np.add.at(gsize, sched.group, 1.0)
-    return dict(
+
+    # ---- shape-bucket padding (inert flows/groups) ------------------------
+    def fpad(a, fill):
+        if Fp == a.shape[0]:
+            return a
+        pad = np.full((Fp - a.shape[0],) + a.shape[1:], fill, a.dtype)
+        return np.concatenate([a, pad])
+
+    active = np.zeros(Fp, bool)
+    active[:F] = True
+    path = fpad(path, Lk)
+    ingress = fpad(ingress, Lk)
+    hopmask = fpad(hopmask, False)
+    n_hops = fpad(sched.n_hops.astype(np.int32), 0)
+    base_rtt = fpad(base_rtt, 1e-7)
+    delay_steps = fpad(delay_steps, 1)
+    line = fpad(line, 1.0)
+    bdp = fpad(bdp, 1.0)
+    fanin = fpad(fanin.astype(np.float32), 1.0)
+    size = fpad(sched.size.astype(np.float32), 0.0)
+    group = fpad(sched.group.astype(np.int32), 0)
+    dep = fpad(sched.dep.astype(np.int32), -1)
+    sdelay = fpad(sched.delay.astype(np.float32), 0.0)
+    gsize = np.concatenate([gsize, np.zeros(Gp - G, np.float32)])
+
+    # ---- reduction plans ---------------------------------------------------
+    invalid = ~hopmask                     # null-link slots contribute zero
+    hop_arrs, hop_strats = [], []
+    for h in range(MAXHOP):
+        a, s = _reduce_plan(path[:, h], Fp, Lk + 1, drop=invalid[:, h])
+        hop_arrs.append(a)
+        hop_strats.append(s)
+    ql_a, ql_s = _reduce_plan(path.reshape(-1), Fp * MAXHOP, Lk + 1,
+                              drop=invalid.reshape(-1))
+    qp_a, qp_s = _reduce_plan(ingress.reshape(-1), Fp * MAXHOP, Lk + 1,
+                              drop=(ingress == Lk).reshape(-1))
+    gr_a, gr_s = _reduce_plan(group, Fp, Gp, drop=~active)
+    pa_a, pa_s = _reduce_plan(dst_dev[:Lk], Lk, topo.n_devices)
+    qd_a, qd_s = _reduce_plan(topo.src_dev, Lk, topo.n_devices)
+
+    ring = _next_pow2(int(delay_steps.max()) + 1)
+
+    plan = _Plan(
+        n_flows=F, n_flows_pad=Fp, n_groups=G, n_groups_pad=Gp,
+        n_links=Lk, n_dev=topo.n_devices, ring=ring,
+        hop=tuple(hop_strats), qlink=ql_s, qport=qp_s,
+        group=gr_s, pause=pa_s, qdev=qd_s,
+    )
+    pp = dict(
         path=jnp.asarray(path), cap=jnp.asarray(cap),
-        ecn_on=jnp.asarray(ecn_on), dst_dev=jnp.asarray(dst_dev),
-        ingress=jnp.asarray(ingress), can_pause=jnp.asarray(can_pause),
+        dst_dev=jnp.asarray(dst_dev), can_pause=jnp.asarray(can_pause),
         hopmask=jnp.asarray(hopmask),
-        n_hops=jnp.asarray(sched.n_hops),
+        caps_path=jnp.asarray(cap[path]),
+        ecn_mask=jnp.asarray((ecn_on[path] & hopmask).astype(np.float32)),
+        n_hops=jnp.asarray(n_hops),
         base_rtt=jnp.asarray(base_rtt), delay_steps=jnp.asarray(delay_steps),
         line=jnp.asarray(line), bdp=jnp.asarray(bdp),
-        fanin=jnp.asarray(fanin.astype(np.float32)),
-        size=jnp.asarray(sched.size.astype(np.float32)),
-        group=jnp.asarray(sched.group), dep=jnp.asarray(sched.dep),
-        sdelay=jnp.asarray(sched.delay.astype(np.float32)),
+        fanin=jnp.asarray(fanin),
+        size=jnp.asarray(size),
+        group=jnp.asarray(group), dep=jnp.asarray(dep),
+        sdelay=jnp.asarray(sdelay),
         gsize=jnp.asarray(gsize),
-        src_dev=jnp.asarray(topo.src_dev),
-        dev_is_switch=jnp.asarray(topo.dev_is_switch),
+        active=jnp.asarray(active),
         dev_buf=jnp.asarray(topo.dev_buf.astype(np.float32)),
-        n_links=Lk, n_dev=topo.n_devices, n_groups=sched.n_groups,
-        n_flows=sched.n_flows,
+        r_hop=tuple(hop_arrs), r_qlink=ql_a, r_qport=qp_a,
+        r_group=gr_a, r_pause=pa_a, r_qdev=qd_a,
     )
+    return pp, plan
 
 
 def _policy_init(policy: Policy, F: int, pp: dict):
-    try:  # schedule-aware policies (StaticWindow) take the fan-in too
+    # schedule-aware policies (StaticWindow) take the static fan-in too;
+    # dispatch on the signature so TypeErrors raised *inside* init surface
+    if "fanin" in inspect.signature(policy.init).parameters:
         return policy.init(F, pp["line"], pp["bdp"], fanin=pp["fanin"])
-    except TypeError:
-        return policy.init(F, pp["line"], pp["bdp"])
+    return policy.init(F, pp["line"], pp["bdp"])
 
 
-def _init_carry(pp, policy: Policy, cfg: EngineConfig):
-    F, Lk, D, G = pp["n_flows"], pp["n_links"], pp["n_dev"], pp["n_groups"]
-    return dict(
-        backlog=jnp.zeros((F, MAXHOP), jnp.float32),
+def _n_qrows(cfg: EngineConfig) -> int:
+    total = cfg.max_steps * (cfg.max_extends + 1)
+    return -(-total // cfg.queue_stride) if cfg.queue_stride > 0 else 0
+
+
+def _init_carry(pp, plan: _Plan, policy: Policy, cfg: EngineConfig):
+    Fp, Lk, D = plan.n_flows_pad, plan.n_links, plan.n_dev
+    carry = dict(
+        backlog=jnp.zeros((Fp, MAXHOP), jnp.float32),
         remaining=pp["size"] * policy.wire_factor,
-        injected=jnp.zeros(F, jnp.float32),
-        delivered=jnp.zeros(F, jnp.float32),
-        done=jnp.zeros(F, bool),
-        t_finish=jnp.full(F, jnp.inf, jnp.float32),
-        g_count=jnp.zeros(G, jnp.float32),
+        injected=jnp.zeros(Fp, jnp.float32),
+        delivered=jnp.zeros(Fp, jnp.float32),
+        done=~pp["active"],           # padded flows are born finished
+        t_finish=jnp.full(Fp, jnp.inf, jnp.float32),
+        g_count=jnp.zeros(plan.n_groups_pad, jnp.float32),
         # empty groups (possible after topology mapping) complete at t=0
         g_time=jnp.where(pp["gsize"] < 0.5, 0.0, jnp.inf).astype(jnp.float32),
         paused=jnp.zeros(Lk + 1, bool),
         pause_count=jnp.zeros(D, jnp.float32),
-        hist_q=jnp.zeros((cfg.hist, Lk + 1), jnp.float32),
-        hist_tx=jnp.zeros((cfg.hist, Lk + 1), jnp.float32),
-        cc=_policy_init(policy, F, pp),
+        hist_q=jnp.zeros((plan.ring, Lk + 1), jnp.float32),
+        hist_tx=jnp.zeros((plan.ring, Lk + 1), jnp.float32),
+        # copy: some policies' init returns state aliasing pp arrays (e.g.
+        # DCTCP keeps bdp); the carry is donated, so aliases would delete
+        # buffers that pp still needs on the next run
+        cc=jax.tree_util.tree_map(lambda x: jnp.asarray(x).copy(),
+                                  _policy_init(policy, Fp, pp)),
         soft=jnp.zeros((), jnp.float32),
     )
+    if cfg.queue_stride > 0:
+        carry["qbuf"] = jnp.zeros((_n_qrows(cfg), D), jnp.float32)
+    return carry
 
 
-def _make_step(pp, policy: Policy, cfg: EngineConfig, cc_params):
-    F, Lk, D, G = pp["n_flows"], pp["n_links"], pp["n_dev"], pp["n_groups"]
+def _make_step(policy: Policy, cfg: EngineConfig, plan: _Plan):
     dt = cfg.dt
-    path, cap = pp["path"], pp["cap"]
-    hopmask = pp["hopmask"]
+    Lk = plan.n_links
     wire = jnp.float32(policy.wire_factor)
+    stride = cfg.queue_stride
+    n_qrows = _n_qrows(cfg)
 
-    def step(carry, it):
+    def step(carry, it, pp, cc_params):
+        path, hopmask = pp["path"], pp["hopmask"]
         t = it.astype(jnp.float32) * dt
         # ---- 1. delayed signals ------------------------------------------
-        idx = jnp.maximum(it - pp["delay_steps"], 0) % cfg.hist
-        q_d = carry["hist_q"][idx[:, None], path]        # (F, MAXHOP)
-        tx_d = carry["hist_tx"][idx[:, None], path]
-        caps = cap[path]
+        idx = jnp.maximum(it - pp["delay_steps"], 0) % plan.ring
+        flat = idx[:, None] * (Lk + 1) + path            # (F, MAXHOP)
+        q_d = carry["hist_q"].reshape(-1)[flat]
+        tx_d = carry["hist_tx"].reshape(-1)[flat]
+        caps = pp["caps_path"]
         rtt = pp["base_rtt"] + (q_d / caps * hopmask).sum(1)
         mark = jnp.clip((q_d - cfg.kmin) / (cfg.kmax - cfg.kmin), 0.0, 1.0) * cfg.pmax
-        mark = mark * pp["ecn_on"][path] * hopmask
+        mark = mark * pp["ecn_mask"]
         ecn = 1.0 - jnp.prod(1.0 - mark, axis=1)
         util_l = tx_d / caps + q_d / (caps * cfg.t_base_util)
         util = jnp.max(jnp.where(hopmask, util_l, 0.0), axis=1)
@@ -205,33 +427,33 @@ def _make_step(pp, policy: Policy, cfg: EngineConfig, cc_params):
 
         # ---- 4. PFC gates (per-port) ---------------------------------------
         gate = ~carry["paused"]
-        rem_cap = cap * dt * gate
+        rem_cap = pp["cap"] * dt * gate
         rem_cap = rem_cap.at[Lk].set(1e18)
 
         # ---- 5. hop-ordered forwarding -------------------------------------
         delivered = carry["delivered"]
         tx_bytes = jnp.zeros(Lk + 1, jnp.float32)
         for h in range(MAXHOP):
-            lid = path[:, h]
-            dem = jnp.zeros(Lk + 1, jnp.float32).at[lid].add(backlog[:, h])
-            frac = jnp.where(dem > 0, jnp.minimum(1.0, rem_cap / jnp.maximum(dem, 1e-9)), 0.0)
-            moved = backlog[:, h] * frac[lid]
+            if plan.hop[h][0] == "empty":   # no flow ever uses this hop slot
+                continue
+            dem = _reduce(plan.hop[h], pp["r_hop"][h], backlog[:, h])
+            frac = jnp.where(dem > 0,
+                             jnp.minimum(1.0, rem_cap / jnp.maximum(dem, 1e-9)),
+                             0.0)
+            moved = backlog[:, h] * frac[path[:, h]]
             backlog = backlog.at[:, h].add(-moved)
             last = pp["n_hops"] == (h + 1)
             delivered = delivered + jnp.where(last, moved, 0.0)
             if h + 1 < MAXHOP:
                 backlog = backlog.at[:, h + 1].add(jnp.where(last, 0.0, moved))
-            movedsum = jnp.zeros(Lk + 1, jnp.float32).at[lid].add(moved)
+            movedsum = frac * dem          # == per-link sum of `moved`
             rem_cap = jnp.maximum(rem_cap - movedsum, 0.0)
             tx_bytes = tx_bytes + movedsum
 
         # ---- 6. queues ------------------------------------------------------
-        q_link = jnp.zeros(Lk + 1, jnp.float32).at[path.reshape(-1)].add(
-            backlog.reshape(-1))
-        q_dev = jnp.zeros(D, jnp.float32).at[pp["src_dev"]].add(q_link[:Lk])
+        q_link = _reduce(plan.qlink, pp["r_qlink"], backlog.reshape(-1))
         # per-ingress-port occupancy at the receiving switch
-        q_port = jnp.zeros(Lk + 1, jnp.float32).at[pp["ingress"].reshape(-1)].add(
-            backlog.reshape(-1))
+        q_port = _reduce(plan.qport, pp["r_qport"], backlog.reshape(-1))
 
         # ---- 7. PFC per-port hysteresis --------------------------------------
         over = (q_port > cfg.xoff) & pp["can_pause"]
@@ -241,7 +463,8 @@ def _make_step(pp, policy: Policy, cfg: EngineConfig, cc_params):
         # the port stays paused (how NS3 counts them)
         frames = ((paused & ~carry["paused"])[:Lk].astype(jnp.float32)
                   + paused[:Lk].astype(jnp.float32) * (dt / cfg.pause_resend))
-        pause_count = carry["pause_count"].at[pp["dst_dev"][:Lk]].add(frames)
+        pause_count = carry["pause_count"] + _reduce(plan.pause, pp["r_pause"],
+                                                     frames)
 
         # ---- 8. completion --------------------------------------------------
         wire_size = pp["size"] * wire
@@ -251,15 +474,16 @@ def _make_step(pp, policy: Policy, cfg: EngineConfig, cc_params):
         done = carry["done"] | newly
         # completion happens at the END of this step's transfer window
         t_finish = jnp.where(newly, t + dt, carry["t_finish"])
-        g_count = carry["g_count"].at[pp["group"]].add(newly.astype(jnp.float32))
+        g_count = carry["g_count"] + _reduce(plan.group, pp["r_group"],
+                                             newly.astype(jnp.float32))
         g_done_new = (g_count >= pp["gsize"] - 0.5) & ~(carry["g_count"] >= pp["gsize"] - 0.5)
         g_time = jnp.where(g_done_new, t + dt, carry["g_time"])
 
         # ---- 9. history + soft cost ----------------------------------------
         hist_q = lax.dynamic_update_slice_in_dim(
-            carry["hist_q"], q_link[None], it % cfg.hist, axis=0)
+            carry["hist_q"], q_link[None], it % plan.ring, axis=0)
         hist_tx = lax.dynamic_update_slice_in_dim(
-            carry["hist_tx"], (tx_bytes / dt)[None], it % cfg.hist, axis=0)
+            carry["hist_tx"], (tx_bytes / dt)[None], it % plan.ring, axis=0)
         undeliv = jnp.sum(wire_size - jnp.minimum(delivered, wire_size))
         soft = carry["soft"] + dt * undeliv / jnp.maximum(jnp.sum(wire_size), 1.0)
 
@@ -269,59 +493,160 @@ def _make_step(pp, policy: Policy, cfg: EngineConfig, cc_params):
             g_count=g_count, g_time=g_time, paused=paused,
             pause_count=pause_count, hist_q=hist_q, hist_tx=hist_tx,
             cc=cc, soft=soft)
-        return new_carry, q_dev
+        if stride > 0:
+            # strided timeline recording; rows for skipped steps are dropped
+            q_dev = _reduce(plan.qdev, pp["r_qdev"], q_link[:Lk])
+            row = jnp.where(it % stride == 0, it // stride, n_qrows)
+            new_carry["qbuf"] = carry["qbuf"].at[row].set(q_dev, mode="drop")
+        return new_carry
 
     return step
 
 
+def _make_run(policy: Policy, cfg: EngineConfig, plan: _Plan,
+              early_exit: bool):
+    """Build the full (jittable) stepping loop.
+
+    Each step is gated on ``done.all() | (it >= total)`` so finished steps
+    are no-ops; with ``early_exit`` the chunked while_loop additionally
+    stops integrating at the first chunk boundary where every flow is done.
+    Both variants therefore produce bitwise-identical carries.
+    """
+    step = _make_step(policy, cfg, plan)
+    total = cfg.max_steps * (cfg.max_extends + 1)
+    chunk = max(1, min(cfg.chunk_steps, total))
+
+    def run(carry, pp, cc_params):
+        def body(c, it):
+            c2 = lax.cond(jnp.all(c["done"]) | (it >= total),
+                          lambda c: c,
+                          lambda c: step(c, it, pp, cc_params),
+                          c)
+            return c2, None
+
+        if not early_exit:
+            carry2, _ = lax.scan(body, carry, jnp.arange(total, dtype=jnp.int32))
+            return carry2, jnp.int32(total)
+
+        def w_body(state):
+            c, it0 = state
+            c, _ = lax.scan(body, c, it0 + jnp.arange(chunk, dtype=jnp.int32))
+            return c, it0 + chunk
+
+        def w_cond(state):
+            c, it0 = state
+            return (~jnp.all(c["done"])) & (it0 < total)
+
+        carry2, it_end = lax.while_loop(w_cond, w_body, (carry, jnp.int32(0)))
+        return carry2, jnp.minimum(it_end, total)
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# compile cache: (policy identity, cfg, plan) -> jitted run
+# ---------------------------------------------------------------------------
+
+_RUN_CACHE: dict = {}
+
+
+def _policy_cache_key(policy: Policy):
+    """Hashable identity of a policy's *logic* (params ride along traced,
+    but ``init`` may bake closure defaults into the carry, so include the
+    default params in the key)."""
+    return (policy.name, float(policy.wire_factor),
+            getattr(policy.init, "__code__", policy.init),
+            getattr(policy.update, "__code__", policy.update),
+            tuple(sorted((k, float(v)) for k, v in policy.params.items())))
+
+
+def compiled_run(policy: Policy, cfg: EngineConfig, plan: _Plan,
+                 early_exit: bool = True):
+    """Jitted stepping loop, cached across scenarios with equal plans.
+
+    The carry (arg 0) is donated: every run must pass a freshly built one.
+    """
+    key = (_policy_cache_key(policy), cfg, plan, early_exit)
+    if key not in _RUN_CACHE:
+        run = _make_run(policy, cfg, plan, early_exit)
+        _RUN_CACHE[key] = jax.jit(run, donate_argnums=(0,))
+    return _RUN_CACHE[key]
+
+
 class Simulator:
-    """Compiled fluid simulation of one (topology, schedule, policy)."""
+    """Compiled fluid simulation of one (topology, schedule, policy).
+
+    ``pad_flows`` / ``pad_groups`` (see ``_prep``) let ``SweepRunner``
+    bucket same-shaped scenarios onto one compiled executable.
+    """
 
     def __init__(self, topo: Topology, sched: Schedule, policy: Policy,
-                 cfg: EngineConfig = EngineConfig()):
+                 cfg: EngineConfig = EngineConfig(),
+                 pad_flows: int | None = None, pad_groups: int | None = None):
         self.topo, self.sched, self.policy, self.cfg = topo, sched, policy, cfg
-        self.pp = _prep(topo, sched, cfg)
+        self.pp, self.plan = _prep(topo, sched, cfg, pad_flows, pad_groups)
+        self._soft_jit = None
 
-        def segment(carry, it0, cc_params):
-            step = _make_step(self.pp, policy, cfg, cc_params)
-            its = it0 + jnp.arange(cfg.max_steps)
-            return lax.scan(step, carry, its)
-
-        self._segment = jax.jit(segment)
-
-    def run(self, cc_params: dict | None = None) -> Results:
-        cfg = self.cfg
+    def run(self, cc_params: dict | None = None, early_exit: bool = True) -> Results:
         params = cc_params if cc_params is not None else self.policy.params
-        carry = _init_carry(self.pp, self.policy, cfg)
-        qs = []
-        for k in range(cfg.max_extends + 1):
-            carry, q_dev = self._segment(carry, jnp.asarray(k * cfg.max_steps), params)
-            qs.append(np.asarray(q_dev))
-            if bool(np.asarray(carry["done"]).all()):
-                break
-        dev_queue = np.concatenate(qs, axis=0)
-        t_fin = np.asarray(carry["t_finish"])
-        finished = bool(np.asarray(carry["done"]).all())
+        fn = compiled_run(self.policy, self.cfg, self.plan, early_exit)
+        carry = _init_carry(self.pp, self.plan, self.policy, self.cfg)
+        carry, steps = fn(carry, self.pp, params)
+        return self._results(carry, int(steps))
+
+    def _results(self, carry, steps_run: int) -> Results:
+        F, G = self.plan.n_flows, self.plan.n_groups
+        t_fin = np.asarray(carry["t_finish"])[:F]
+        done = np.asarray(carry["done"])[:F]
+        if self.cfg.queue_stride > 0:
+            dev_queue = np.asarray(carry["qbuf"])
+            rows = -(-steps_run // self.cfg.queue_stride)
+            dev_queue = dev_queue[:rows]
+        else:
+            dev_queue = np.zeros((0, self.plan.n_dev), np.float32)
         return Results(
-            finished=finished,
+            finished=bool(done.all()),
             completion_time=float(np.max(np.where(np.isfinite(t_fin), t_fin, 0.0))),
             t_finish=t_fin,
-            group_time=np.asarray(carry["g_time"]),
+            group_time=np.asarray(carry["g_time"])[:G],
             group_names=self.sched.group_names,
             pause_count=np.asarray(carry["pause_count"]),
             dev_queue=dev_queue,
-            dt=cfg.dt,
-            delivered=np.asarray(carry["delivered"]),
+            dt=self.cfg.dt,
+            delivered=np.asarray(carry["delivered"])[:F],
             soft_cost=float(carry["soft"]),
             meta={"policy": self.policy.name, "topo": self.topo.name,
-                  "n_flows": self.sched.n_flows},
+                  "n_flows": self.sched.n_flows, "steps_run": steps_run,
+                  "queue_stride": self.cfg.queue_stride},
         )
 
+    # -- differentiable objective -------------------------------------------
+    def soft_cost_fn(self):
+        """Pure ``cc_params -> soft_cost`` suitable for grad/vmap/jit.
+
+        Uses the monolithic (fixed-length) scan: ``lax.while_loop`` is not
+        reverse-mode differentiable.  The integrand freezes once every flow
+        completes (steps become no-ops), so the integral is insensitive to
+        the step budget's tail.
+        """
+        run = _make_run(self.policy, self.cfg, self.plan, early_exit=False)
+        pp, plan, policy, cfg = self.pp, self.plan, self.policy, self.cfg
+
+        def cost(cc_params):
+            carry = _init_carry(pp, plan, policy, cfg)
+            carry, _ = run(carry, pp, cc_params)
+            return carry["soft"]
+
+        return cost
+
     def soft_cost(self, cc_params) -> jnp.ndarray:
-        """Differentiable objective: integral of undelivered fraction."""
-        carry = _init_carry(self.pp, self.policy, self.cfg)
-        carry, _ = self._segment(carry, jnp.asarray(0), cc_params)
-        return carry["soft"]
+        """Differentiable objective: integral of undelivered fraction.
+
+        Jitted and cached per Simulator; compose ``soft_cost_fn`` yourself
+        for grad/vmap pipelines (as ``core/autotune.py`` does)."""
+        if self._soft_jit is None:
+            self._soft_jit = jax.jit(self.soft_cost_fn())
+        return self._soft_jit(cc_params)
 
 
 def simulate(topo, sched, policy, cfg: EngineConfig = EngineConfig()) -> Results:

@@ -20,8 +20,9 @@ import numpy as np
 
 from repro.core import cc as cc_mod
 from repro.core.collectives import ScheduleBuilder, _direct_phase
-from repro.core.engine import EngineConfig, simulate
+from repro.core.engine import EngineConfig
 from repro.core.hlo_comm import CollectiveOp
+from repro.core.sweep import SweepRunner
 from repro.core.topology import Topology, clos
 
 
@@ -71,13 +72,19 @@ def schedule_from_ops(topo: Topology, ops: list[CollectiveOp],
 
 def predict_policies(ops, mesh_shape, axis_of_op, policies=None,
                      topo: Topology | None = None,
-                     cfg: EngineConfig | None = None) -> list[PredictReport]:
+                     cfg: EngineConfig | None = None,
+                     runner: SweepRunner | None = None) -> list[PredictReport]:
+    """Reports don't consume queue timelines, so recording is off; pass a
+    shared ``runner`` to reuse compiled engines across calls (shape-bucket
+    padding makes same-sized schedules hit the same executable)."""
     topo = topo or clos(n_racks=2, nodes_per_rack=2, gpus_per_node=8)
-    cfg = cfg or EngineConfig(dt=2e-6, max_steps=4000, max_extends=6)
+    cfg = cfg or EngineConfig(dt=2e-6, max_steps=4000, max_extends=6,
+                              queue_stride=0)
+    runner = runner or SweepRunner(cfg)
     sched = schedule_from_ops(topo, ops, mesh_shape, axis_of_op)
     out = []
-    for name in (policies or cc_mod.ALL_POLICIES):
-        res = simulate(topo, sched, cc_mod.get_policy(name), cfg)
-        out.append(PredictReport(name, res.completion_time,
+    for res in runner.run_policies(topo, sched,
+                                   policies or cc_mod.ALL_POLICIES, cfg=cfg):
+        out.append(PredictReport(res.meta["policy"], res.completion_time,
                                  float(res.pause_count.sum()), res.finished))
     return out

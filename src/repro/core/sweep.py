@@ -1,0 +1,205 @@
+"""Sweep-scale driving of the fluid engine: shape-bucketed compile reuse
+and vmap-batched CC-parameter sweeps.
+
+The paper's result set is a sweep (CC policies x collectives x topologies,
+Figs 3-11); the engine in ``repro.core.engine`` compiles one executable per
+``(policy logic, EngineConfig, static plan)``.  ``SweepRunner`` adds the
+two missing pieces for running *many* scenarios fast:
+
+* **shape buckets** — flow/group counts are padded up to the next power of
+  two (inert padding, see ``engine._prep``), so schedules of similar size
+  share one compiled executable instead of retracing per scenario;
+* **vmap batching** — ``run_batch`` stacks CC parameter pytrees of one
+  policy family on a leading axis and runs the whole population in a
+  single compiled call (``jax.vmap`` over the stepping loop), which turns
+  grid sweeps and population-based autotuning into one dispatch.
+
+Batched runs never record the per-device queue timeline (it is a
+per-member ``(T, D)`` buffer); use a plain ``run`` for Fig 5-7 style plots.
+
+CPU note: vmap batching pays off where per-op dispatch overhead dominates
+— small/medium scenarios such as population autotuning and CC grid sweeps
+(measured ~2-4.5x over serial at B=8-16 on the dev container; see
+``benchmarks/bench_engine.py``).  For very large gather-bound scenarios on
+CPU the batched stepping loses its early-exit advantage (it runs until the
+*slowest* member finishes and computes both sides of the done-gate), so
+prefer serial ``run``/``run_policies`` there; on accelerator backends the
+batch dimension vectorizes fully.
+
+    runner = SweepRunner(EngineConfig(dt=2e-6, max_steps=4000, queue_stride=0))
+    results = runner.run_policies(topo, sched, ["pfc", "dcqcn", "hpcc"])
+    batch = runner.grid(topo, sched, get_policy("dcqcn"),
+                        {"rai_frac": [0.01, 0.03, 0.1],
+                         "timer": [25e-6, 55e-6, 105e-6]})
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import jax
+import numpy as np
+
+from repro.core import cc as cc_mod
+from repro.core.cc import Policy
+from repro.core.engine import (EngineConfig, Results, Simulator, _init_carry,
+                               _make_run, _next_pow2, _policy_cache_key)
+
+
+def _bucket(n: int, lo: int = 32) -> int:
+    return max(lo, _next_pow2(max(n, 1)))
+
+
+@dataclasses.dataclass
+class BatchResults:
+    """One vmapped sweep over B stacked CC parameter sets."""
+    policy: str
+    params: dict                  # stacked leaves, shape (B,)
+    completion_time: np.ndarray   # (B,)
+    t_finish: np.ndarray          # (B, F)
+    pause_count: np.ndarray       # (B, D)
+    delivered: np.ndarray         # (B, F)
+    soft_cost: np.ndarray         # (B,)
+    finished: np.ndarray          # (B,) bool
+
+    @property
+    def n(self) -> int:
+        return len(self.completion_time)
+
+    def best(self) -> int:
+        """Index of the fastest *finished* member (lowest completion)."""
+        if not self.finished.any():
+            raise ValueError("no sweep member finished within the step "
+                             "budget; raise max_steps/max_extends")
+        ct = np.where(self.finished, self.completion_time, np.inf)
+        return int(np.argmin(ct))
+
+    def param_set(self, i: int) -> dict:
+        return {k: float(np.asarray(v)[i]) for k, v in self.params.items()}
+
+
+_BATCH_CACHE: dict = {}
+
+
+def _compiled_batch(policy: Policy, cfg: EngineConfig, plan):
+    """vmapped (pp, stacked_params) -> stacked finals, cached like
+    ``engine.compiled_run`` so same-shaped scenarios share the executable."""
+    key = (_policy_cache_key(policy), cfg, plan)
+    if key not in _BATCH_CACHE:
+        run = _make_run(policy, cfg, plan, early_exit=True)
+
+        def one(pp, params):
+            carry = _init_carry(pp, plan, policy, cfg)
+            carry, steps = run(carry, pp, params)
+            return {"t_finish": carry["t_finish"], "done": carry["done"],
+                    "pause_count": carry["pause_count"],
+                    "delivered": carry["delivered"], "soft": carry["soft"],
+                    "steps": steps}
+
+        _BATCH_CACHE[key] = jax.jit(jax.vmap(one, in_axes=(None, 0)))
+    return _BATCH_CACHE[key]
+
+
+class SweepRunner:
+    """Compile-once, run-many driver for ``repro.core.engine``.
+
+    One instance caches prepared scenarios (``_prep`` output) by object
+    identity and leans on the engine's global compile cache for the jitted
+    stepping loops, so sweeping P policies over S same-shaped scenarios
+    compiles each policy once, not P x S times.
+    """
+
+    # prepared-scenario cache bound: entries hold (Fp, MAXHOP)-scale arrays,
+    # so cap the count and evict FIFO; compiled executables live in the
+    # engine's global cache and survive eviction
+    MAX_SIMS = 64
+
+    def __init__(self, cfg: EngineConfig | None = None, bucket: bool = True):
+        self.cfg = cfg or EngineConfig()
+        self.bucket = bucket
+        self._sims: dict = {}
+
+    @staticmethod
+    def _scenario_key(topo, sched):
+        """Content fingerprint, so schedules rebuilt per call (e.g. the
+        DLRM iteration in figs 10/11) still hit the cache."""
+        h = hashlib.sha1()
+        for a in (sched.path, sched.size, sched.group, sched.dep,
+                  sched.delay, topo.cap, topo.lat, topo.src_dev,
+                  topo.dst_dev, topo.ecn_on, topo.fabric,
+                  topo.dev_is_switch, topo.dev_buf):
+            h.update(np.ascontiguousarray(a).tobytes())
+        return (topo.name, sched.n_flows, sched.n_groups, h.hexdigest())
+
+    # -- scenario preparation ------------------------------------------------
+    def simulator(self, topo, sched, policy: Policy,
+                  cfg: EngineConfig | None = None) -> Simulator:
+        cfg = cfg or self.cfg
+        key = (self._scenario_key(topo, sched), cfg,
+               _policy_cache_key(policy))
+        sim = self._sims.get(key)
+        if sim is None:
+            pf = _bucket(sched.n_flows) if self.bucket else None
+            pg = _bucket(sched.n_groups, lo=8) if self.bucket else None
+            sim = Simulator(topo, sched, policy, cfg,
+                            pad_flows=pf, pad_groups=pg)
+            while len(self._sims) >= self.MAX_SIMS:
+                self._sims.pop(next(iter(self._sims)))
+            self._sims[key] = sim
+        return sim
+
+    # -- single runs ---------------------------------------------------------
+    def run(self, topo, sched, policy: Policy | str,
+            cc_params: dict | None = None,
+            cfg: EngineConfig | None = None) -> Results:
+        policy = cc_mod.get_policy(policy) if isinstance(policy, str) else policy
+        return self.simulator(topo, sched, policy, cfg).run(cc_params)
+
+    def run_policies(self, topo, sched, policies=None,
+                     cfg: EngineConfig | None = None) -> list[Results]:
+        """One scenario under each CC policy (the paper's per-figure loop)."""
+        out = []
+        for p in (policies or cc_mod.ALL_POLICIES):
+            out.append(self.run(topo, sched, p, cfg=cfg))
+        return out
+
+    # -- batched parameter sweeps -------------------------------------------
+    def run_batch(self, topo, sched, policy: Policy | str,
+                  stacked_params: dict) -> BatchResults:
+        """Simulate B parameter sets of one policy family in one call.
+
+        ``stacked_params`` maps param name -> length-B array; missing params
+        are broadcast from the policy defaults.  Queue timelines are never
+        recorded for batched runs (per-member buffers).
+        """
+        policy = cc_mod.get_policy(policy) if isinstance(policy, str) else policy
+        policy.check_tunable(stacked_params)
+        B = len(np.asarray(next(iter(stacked_params.values()))))
+        full = {k: np.asarray(stacked_params.get(k, np.full(B, float(v))),
+                              np.float32)
+                for k, v in policy.params.items()}
+        cfg = dataclasses.replace(self.cfg, queue_stride=0)
+        sim = self.simulator(topo, sched, policy, cfg)
+        out = _compiled_batch(policy, cfg, sim.plan)(sim.pp, full)
+        F, G = sim.plan.n_flows, sim.plan.n_groups
+        del G
+        t_fin = np.asarray(out["t_finish"])[:, :F]
+        done = np.asarray(out["done"])[:, :F]
+        ct = np.max(np.where(np.isfinite(t_fin), t_fin, 0.0), axis=1)
+        return BatchResults(
+            policy=policy.name, params=full,
+            completion_time=ct, t_finish=t_fin,
+            pause_count=np.asarray(out["pause_count"]),
+            delivered=np.asarray(out["delivered"])[:, :F],
+            soft_cost=np.asarray(out["soft"]),
+            finished=done.all(axis=1),
+        )
+
+    def grid(self, topo, sched, policy: Policy | str,
+             param_grid: dict) -> BatchResults:
+        """Full-factorial sweep: {param: [values...]} -> one batched run."""
+        keys = list(param_grid)
+        mesh = np.meshgrid(*[np.asarray(param_grid[k], np.float32)
+                             for k in keys], indexing="ij")
+        return self.run_batch(topo, sched, policy,
+                              {k: m.reshape(-1) for k, m in zip(keys, mesh)})

@@ -157,9 +157,15 @@ class IterationReport:
 def simulate_dlrm_iteration(topo: Topology, gpus: list, policy,
                             prof: DLRMComputeProfile = DLRMComputeProfile(),
                             comm: DLRMCommSpec = DLRMCommSpec(),
-                            cfg: EngineConfig = EngineConfig(dt=2e-6)) -> IterationReport:
+                            cfg: EngineConfig = EngineConfig(dt=2e-6),
+                            runner=None) -> IterationReport:
+    """Pass a ``repro.core.sweep.SweepRunner`` to reuse compiled engines
+    across the per-policy / per-algo loops of Figs 10-11."""
     sched = build_dlrm_iteration(topo, gpus, prof, comm)
-    res = simulate(topo, sched, policy, cfg)
+    if runner is not None:
+        res = runner.run(topo, sched, policy, cfg=cfg)
+    else:
+        res = simulate(topo, sched, policy, cfg)
     # iteration ends when every flow (incl. compute markers) is done, plus
     # the optimizer update after the last gradient arrives
     iter_time = res.completion_time + prof.opt_update

@@ -1,0 +1,21 @@
+"""Golden-equivalence scenarios, shared by tests/test_engine_equiv.py and
+scripts/gen_engine_goldens.py.  The stored golden file was generated from
+the PR-1 seed engine — keep these definitions bitwise-stable or re-baseline
+(see the script's docstring)."""
+from repro.core.collectives import allreduce_1d, alltoall, incast
+from repro.core.engine import EngineConfig
+from repro.core.topology import clos, single_switch
+
+
+def scenarios():
+    ss = single_switch(8)
+    small = clos(n_racks=1, nodes_per_rack=2, gpus_per_node=4)
+    mid = clos(n_racks=2, nodes_per_rack=2, gpus_per_node=8)
+    yield ("incast_ss8", ss, incast(ss, list(range(1, 8)), 0, 10e6),
+           ["pfc", "dcqcn", "dctcp"],
+           EngineConfig(dt=1e-6, max_steps=1500, max_extends=5))
+    yield ("ar1d_clos8", small, allreduce_1d(small, list(range(8)), 8e6),
+           ["hpcc", "static_window", "timely"],
+           EngineConfig(dt=1e-6, max_steps=1500, max_extends=2))
+    yield ("a2a_clos32", mid, alltoall(mid, list(range(32)), 16e6),
+           ["dcqcn"], EngineConfig(dt=2e-6, max_steps=1200, max_extends=1))

@@ -1,0 +1,49 @@
+"""Optional-hypothesis shim.
+
+Import ``given`` / ``settings`` / ``st`` from here instead of from
+``hypothesis`` directly: when hypothesis is not installed the decorators
+turn into ``pytest.mark.skip`` so property-based tests auto-skip while the
+rest of the module still collects and runs.
+"""
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    class settings:  # noqa: N801 - mirrors the hypothesis API
+        def __init__(self, *_a, **_k):
+            pass
+
+        def __call__(self, fn):
+            return fn
+
+        @staticmethod
+        def register_profile(*_a, **_k):
+            pass
+
+        @staticmethod
+        def load_profile(*_a, **_k):
+            pass
+
+    class _Strategy:
+        """Inert stand-in supporting the chained strategy API."""
+
+        def __call__(self, *_a, **_k):
+            return self
+
+        def __getattr__(self, _name):
+            return self
+
+    class _St:
+        def __getattr__(self, _name):
+            return _Strategy()
+
+    st = _St()

@@ -1,11 +1,20 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests and benches must see
-the single real CPU device; only launch/dryrun.py forces 512 devices."""
+the single real CPU device; only launch/dryrun.py forces 512 devices.
+
+hypothesis is optional: property-based tests import the shim in
+``tests/_hyp.py`` and auto-skip when it is missing.
+"""
 import jax
 import pytest
-from hypothesis import settings
 
-settings.register_profile("ci", max_examples=15, deadline=None)
-settings.load_profile("ci")
+try:
+    from hypothesis import settings
+except ImportError:
+    settings = None
+
+if settings is not None:
+    settings.register_profile("ci", max_examples=15, deadline=None)
+    settings.load_profile("ci")
 
 
 @pytest.fixture(scope="session")

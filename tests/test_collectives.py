@@ -1,7 +1,7 @@
 """System layer: collective decomposition correctness."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.collectives import (allreduce_1d, allreduce_2d, alltoall,
                                     collective_bytes_on_nics)

@@ -1,7 +1,7 @@
 """Fluid-engine invariants: conservation, bounds, PFC hysteresis, deps."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.cc import get_policy
 from repro.core.collectives import ScheduleBuilder, incast

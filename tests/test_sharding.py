@@ -11,8 +11,15 @@ from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.common.sharding import MeshRules
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+def _abstract_mesh(sizes, names):
+    try:
+        return AbstractMesh(sizes, names)
+    except TypeError:   # jax<=0.4.x signature: AbstractMesh(((name, size), ...))
+        return AbstractMesh(tuple(zip(names, sizes)))
+
+
+MESH = _abstract_mesh((16, 16), ("data", "model"))
+MESH3 = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_basic_rules():
@@ -92,6 +99,8 @@ def test_mini_dryrun_8_devices(tmp_path):
                          out_shardings=(shard(specs), shard(o_specs), None))
             compiled = fn.lower(p_abs, o_abs, batch).compile()
         ca = compiled.cost_analysis()
+        if isinstance(ca, list):   # jax<=0.4.x: one dict per device
+            ca = ca[0]
         print(json.dumps({"flops": ca.get("flops", 0.0),
                           "n_devices": mesh.devices.size}))
     """)
