@@ -95,6 +95,21 @@ def bench_sweep(B: int = 8) -> dict:
     for i in range(B):
         sim.run(cc_params=batch.param_set(i))
     serial = time.time() - t0
+    # joint CC x fabric grid: after a same-shaped warmup the whole cross
+    # product is one dispatch with zero new compiles
+    from repro.core.sweep import compile_stats
+
+    def fab_grid():
+        return runner.grid(topo, sched, policy,
+                           {"rai_frac": [0.01, 0.03]},
+                           fabric_grid={"kmin": [200e3, 400e3],
+                                        "xoff": [0.5e6, 1e6]})
+
+    fab_grid()                      # warmup (compiles the B=8 batch shape)
+    s0 = compile_stats()
+    t0 = time.time()
+    fgrid = fab_grid()
+    fabric_grid_s = time.time() - t0
     return {
         "scenario": "clos8_ar1d dcqcn param sweep (autotune regime)",
         "batch": B,
@@ -104,6 +119,9 @@ def bench_sweep(B: int = 8) -> dict:
         "serial_s_same_params": round(serial, 3),
         "vmap_speedup_vs_serial": round(serial / warm, 1),
         "all_finished": bool(batch.finished.all()),
+        "fabric_grid_B8_s": round(fabric_grid_s, 3),
+        "fabric_grid_recompiled": compile_stats() != s0,
+        "fabric_grid_all_finished": bool(fgrid.finished.all()),
     }
 
 

@@ -1,7 +1,11 @@
-"""Shared benchmark machinery: cached simulations + CSV output.
+"""Shared benchmark machinery: cached spec simulations + CSV output.
 
-Scale knob: REPRO_BENCH_SCALE=paper|small (default paper = the paper's
-128-GPU 8-rack CLOS; small = 32 GPUs for quick runs)."""
+Figures are driven by ``repro.core.scenario.ScenarioSpec``: each figure
+lists specs (fabric x workload x policy) and hands them to the shared
+``SweepRunner``; same-shaped specs reuse compiled engines across figures.
+
+Scale knob: REPRO_BENCH_SCALE=paper|mid|small (small = 32 GPUs for CI,
+mid = 64, paper = the paper's 128-GPU 8-rack CLOS)."""
 from __future__ import annotations
 
 import json
@@ -10,10 +14,9 @@ import time
 
 import numpy as np
 
-from repro.core.cc import ALL_POLICIES, get_policy
 from repro.core.engine import EngineConfig, Results
+from repro.core.scenario import FabricSpec, ScenarioSpec
 from repro.core.sweep import SweepRunner
-from repro.core.topology import clos, single_switch
 
 # small = 32 GPUs/2 racks (CI), mid = 64 GPUs/4 racks (default: paper
 # topology family at a tractable single-core runtime), paper = the full
@@ -24,12 +27,26 @@ OUTDIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
 _CACHE: dict = {}
 
 
+def paper_fabric() -> FabricSpec:
+    """The paper's CLOS family at the configured scale.
+
+    oversubscription=2.0 -> 8 spines per 16 NIC downlinks, matching the
+    seed ``clos()`` default (the Fig-5 ECMP-imbalance regime) so figure
+    results stay comparable across PRs."""
+    racks = {"small": 2, "mid": 4}.get(SCALE, 8)
+    return FabricSpec(family="clos", n_racks=racks, nodes_per_rack=2,
+                      gpus_per_node=8, oversubscription=2.0)
+
+
+def single_fabric(n_gpus: int = 8) -> FabricSpec:
+    return FabricSpec(family="single", n_racks=1, nodes_per_rack=1,
+                      gpus_per_node=n_gpus)
+
+
 def paper_clos():
-    if SCALE == "small":
-        return clos(n_racks=2, nodes_per_rack=2, gpus_per_node=8), 32
-    if SCALE == "mid":
-        return clos(n_racks=4, nodes_per_rack=2, gpus_per_node=8), 64
-    return clos(n_racks=8, nodes_per_rack=2, gpus_per_node=8), 128
+    """(topology, n_gpus) — kept for drivers that need the raw topology."""
+    spec = paper_fabric()
+    return spec.build(), spec.n_gpus
 
 
 def collective_size():
@@ -50,15 +67,16 @@ def engine_cfg(dt=2e-6, steps=4000, queue_stride=1):
 RUNNER = SweepRunner()
 
 
-def run_cached(tag: str, topo, sched, policy_name: str,
-               cfg: EngineConfig) -> Results:
-    key = (tag, policy_name)
+def run_cached(tag: str, spec: ScenarioSpec, cfg: EngineConfig) -> Results:
+    """Simulate a ScenarioSpec once per (tag, policy) and memoize."""
+    pol = spec.policy if isinstance(spec.policy, str) else spec.policy.name
+    key = (tag, pol)
     hit = _CACHE.get(key)
     # a queue-recording request upgrades a stride-0 entry cached by a
     # completion-only figure, so figure ordering can't break Figs 3-7
     if hit is None or (cfg.queue_stride > 0 and hit.dev_queue.size == 0):
         t0 = time.time()
-        hit = RUNNER.run(topo, sched, get_policy(policy_name), cfg=cfg)
+        hit = RUNNER.run_spec(spec, cfg=cfg)
         hit.meta["wall_s"] = time.time() - t0
         _CACHE[key] = hit
     return hit

@@ -1,30 +1,31 @@
 """One function per paper figure/table (paper Figs 3-10 + beyond-paper).
 
-Each returns CSV rows (figure,metric,...,value) and saves raw series to
-experiments/bench/*.json for inspection.
+Each figure lists ``ScenarioSpec``s (fabric x workload x policy) and runs
+them through the shared ``SweepRunner``; rows are CSV tuples
+(figure,metric,...,value) and raw series land in experiments/bench/*.json.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import (RUNNER, collective_size, downsample, emit,
-                               engine_cfg, paper_clos, run_cached, save_json)
+                               engine_cfg, paper_clos, paper_fabric,
+                               run_cached, save_json, single_fabric)
 from repro.core.cc import ALL_POLICIES, get_policy
-from repro.core.collectives import allreduce_1d, allreduce_2d, alltoall, incast
 from repro.core.engine import EngineConfig
-from repro.core.topology import single_switch
+from repro.core.scenario import CollectiveSpec, IncastSpec, ScenarioSpec
 from repro.core.workload import (DLRMCommSpec, DLRMComputeProfile,
                                  simulate_dlrm_iteration)
 
 
 def fig3_incast():
     """Fig 3: queue-length timeline + completion for 7->1 incast."""
-    topo = single_switch(8)
-    sched = incast(topo, list(range(1, 8)), 0, 10e6)
+    fab = single_fabric(8)
+    wl = IncastSpec(n_senders=7, size_each=10e6)
     cfg = EngineConfig(dt=1e-6, max_steps=2000, max_extends=6)
     rows, series = [], {}
     for pol in ALL_POLICIES:
-        r = run_cached("incast", topo, sched, pol, cfg)
+        r = run_cached("incast", ScenarioSpec(fab, wl, pol), cfg)
         q = r.dev_queue[:, 8]
         rows.append(("fig3", "completion_ms", pol, round(r.completion_time * 1e3, 4)))
         rows.append(("fig3", "max_queue_mb", pol, round(float(q.max()) / 1e6, 3)))
@@ -37,14 +38,14 @@ def fig3_incast():
 def fig4_single_switch_collectives():
     """Fig 4: single-switch All-Reduce / All-To-All show no congestion."""
     n = 8
-    topo = single_switch(n)
+    fab = single_fabric(n)
     size = 10e6
     cfg = EngineConfig(dt=1e-6, max_steps=3000, max_extends=6)
     rows, series = [], {}
-    for name, sched in (("alltoall", alltoall(topo, list(range(n)), size)),
-                        ("allreduce", allreduce_1d(topo, list(range(n)), size))):
+    for name, kind in (("alltoall", "a2a"), ("allreduce", "1d")):
+        wl = CollectiveSpec(kind, size)
         for pol in ("pfc", "dcqcn", "dctcp", "timely", "hpcc"):
-            r = run_cached(f"ss_{name}", topo, sched, pol, cfg)
+            r = run_cached(f"ss_{name}", ScenarioSpec(fab, wl, pol), cfg)
             q = r.dev_queue[:, n]  # the switch
             rows.append(("fig4", f"{name}_completion_ms", pol,
                          round(r.completion_time * 1e3, 4)))
@@ -58,14 +59,15 @@ def fig4_single_switch_collectives():
 
 def fig5_7_clos_queues():
     """Figs 5/6/7: ToR vs Spine queue timelines + ECMP imbalance (A2A)."""
-    topo, n = paper_clos()
-    sched = alltoall(topo, list(range(n)), collective_size())
+    fab = paper_fabric()
+    topo = fab.build()
+    wl = CollectiveSpec("a2a", collective_size())
     cfg = engine_cfg()
     rows, series = [], {}
     tor = topo.meta["tor_devs"]
     spine = topo.meta["spine_devs"]
     for pol in ALL_POLICIES:
-        r = run_cached("clos_a2a", topo, sched, pol, cfg)
+        r = run_cached("clos_a2a", ScenarioSpec(fab, wl, pol), cfg)
         tq = r.dev_queue[:, tor]
         sq = r.dev_queue[:, spine]
         rows.append(("fig6", "tor_max_queue_mb", pol, round(float(tq.max()) / 1e6, 3)))
@@ -82,21 +84,29 @@ def fig5_7_clos_queues():
     return rows
 
 
+# one cache tag per workload kind, shared with figs 5-7/9 where equal
+_AR_KINDS = {"ar_1d": "1d", "ar_2d": "2d", "ar_ring": "ring",
+             "ar_hring": "hring", "a2a": "a2a"}
+
+
+def _ar_tag(name):
+    return "clos_a2a" if name == "a2a" else f"clos_{name}"
+
+
 def fig8_completion():
-    """Fig 8: completion time of 1D/2D All-Reduce + All-To-All per CC."""
-    topo, n = paper_clos()
+    """Fig 8: completion time per collective algorithm per CC policy
+    (paper: 1D/2D/A2A; beyond-paper: the registered ring variants too)."""
+    fab = paper_fabric()
     size = collective_size()
     cfg = engine_cfg(queue_stride=0)   # no timeline consumed
     rows = []
-    scheds = {
-        "ar_1d": allreduce_1d(topo, list(range(n)), size),
-        "ar_2d": allreduce_2d(topo, list(range(n)), size),
-        "a2a": alltoall(topo, list(range(n)), size),
-    }
-    for name, sched in scheds.items():
-        for pol in ALL_POLICIES:
-            r = run_cached(f"clos_{name}" if name != "a2a" else "clos_a2a",
-                           topo, sched, pol, cfg)
+    for name, kind in _AR_KINDS.items():
+        wl = CollectiveSpec(kind, size)
+        # ring variants are beyond-paper: bound their cost to the headline
+        # policies (their flow count is P x the direct algorithms')
+        pols = (("pfc", "dcqcn", "hpcc") if "ring" in kind else ALL_POLICIES)
+        for pol in pols:
+            r = run_cached(_ar_tag(name), ScenarioSpec(fab, wl, pol), cfg)
             rows.append(("fig8", f"{name}_completion_ms", pol,
                          round(r.completion_time * 1e3, 4)))
             if not r.finished:
@@ -106,18 +116,14 @@ def fig8_completion():
 
 def fig9_pfc_counts():
     """Fig 9: PAUSE-frame counts per workload per CC."""
-    topo, n = paper_clos()
+    fab = paper_fabric()
     size = collective_size()
     cfg = engine_cfg(queue_stride=0)
     rows = []
-    scheds = {
-        "ar_1d": ("clos_ar_1d", allreduce_1d(topo, list(range(n)), size)),
-        "ar_2d": ("clos_ar_2d", allreduce_2d(topo, list(range(n)), size)),
-        "a2a": ("clos_a2a", alltoall(topo, list(range(n)), size)),
-    }
-    for name, (tag, sched) in scheds.items():
+    for name in ("ar_1d", "ar_2d", "a2a"):
+        wl = CollectiveSpec(_AR_KINDS[name], size)
         for pol in ALL_POLICIES:
-            r = run_cached(tag, topo, sched, pol, cfg)
+            r = run_cached(_ar_tag(name), ScenarioSpec(fab, wl, pol), cfg)
             rows.append(("fig9", f"{name}_pfc_frames", pol,
                          int(r.pause_count.sum())))
     return rows
@@ -169,4 +175,53 @@ def fig11_static_window():
         rows.append(("fig11", "pfc_frames", "static_window", sw.pfc_pauses))
         rows.append(("fig11", "slowdown_pct", "static_window",
                      round((sw.iteration_time / pfc.iteration_time - 1) * 100, 2)))
+    return rows
+
+
+def fig12_fabric_sweep():
+    """Beyond-paper (Hoefler/Mittal direction): ECN x PFC-threshold grid
+    per CC policy on a 4x-oversubscribed CLOS A2A — spine contention makes
+    the fabric tuning decisive — one vmapped dispatch per policy."""
+    import dataclasses
+    fab = dataclasses.replace(paper_fabric(), oversubscription=4.0)
+    topo = fab.build()
+    sched = CollectiveSpec("a2a", collective_size() / 2).build_schedule(topo)
+    cfg = engine_cfg(queue_stride=0)   # same integration step as figs 8/9
+    # ECN ramp swept as *paired* (kmin, 4*kmin) points crossed with xoff —
+    # not a kmin x kmax factorial, which would include inverted ramps
+    pts = np.array([(k, 4.0 * k, x)
+                    for k in (100e3, 400e3, 1000e3)
+                    for x in (0.25e6, 1e6, 4e6)], np.float32)
+    rows, series = [], {}
+    for pol in ("dcqcn", "dctcp", "hpcc"):
+        batch = RUNNER.run_batch(topo, sched, pol,
+                                 stacked_fabric={"kmin": pts[:, 0],
+                                                 "kmax": pts[:, 1],
+                                                 "xoff": pts[:, 2]},
+                                 cfg=cfg)
+        b = batch.best()
+        rows.append(("fig12", "best_completion_ms", pol,
+                     round(float(batch.completion_time[b]) * 1e3, 4)))
+        rows.append(("fig12", "best_kmin_kb", pol,
+                     round(float(batch.fabric["kmin"][b]) / 1e3, 1)))
+        rows.append(("fig12", "best_xoff_kb", pol,
+                     round(float(batch.fabric["xoff"][b]) / 1e3, 1)))
+        # spread/frame stats over *finished* members only: an unfinished
+        # member's completion_time is a truncation artifact
+        fin = batch.finished
+        ct = batch.completion_time[fin]
+        frames = batch.pause_count.sum(axis=1)[fin]
+        rows.append(("fig12", "spread_pct", pol,
+                     round(float((ct.max() / ct.min() - 1) * 100), 2)))
+        rows.append(("fig12", "pfc_frames_min", pol, int(frames.min())))
+        rows.append(("fig12", "pfc_frames_max", pol, int(frames.max())))
+        rows.append(("fig12", "n_unfinished", pol, int((~fin).sum())))
+        series[pol] = {
+            "kmin": [float(v) for v in batch.fabric["kmin"]],
+            "xoff": [float(v) for v in batch.fabric["xoff"]],
+            "finished": [bool(v) for v in fin],
+            "completion_ms": [float(v) * 1e3 for v in batch.completion_time],
+            "pfc_frames": [float(v) for v in batch.pause_count.sum(axis=1)],
+        }
+    save_json("fig12_fabric_sweep.json", series)
     return rows

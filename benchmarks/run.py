@@ -20,7 +20,8 @@ def main() -> None:
                figures.fig8_completion,
                figures.fig9_pfc_counts,
                figures.fig10_dlrm_e2e,
-               figures.fig11_static_window):
+               figures.fig11_static_window,
+               figures.fig12_fabric_sweep):
         t0 = time.time()
         try:
             emit(fn())

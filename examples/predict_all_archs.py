@@ -4,7 +4,9 @@ The paper answers "does the RoCE CC policy matter?" for DLRM only.  This
 driver reads each architecture's *measured* per-device collective traffic
 (trip-count-corrected, from the compiled train_4k dry-run artifacts in
 experiments/dryrun/) and replays an equivalent one-iteration communication
-load on the paper's 128-GPU CLOS fabric under each CC policy.
+load on the paper's CLOS fabric under each CC policy — each point is one
+``ScenarioSpec`` (fabric x CollectiveSpec workload x policy) on a shared
+``SweepRunner``.
 
 Calibration: per-device wire bytes per kind B_k are matched by sizing a
 hierarchical All-Reduce (B_ar) and a direct All-To-All (B_a2a) so each
@@ -15,15 +17,14 @@ Run after the dry-run sweep:
 """
 import glob
 import json
-import os
 
-from repro.core.cc import get_policy
-from repro.core.collectives import allreduce_2d, alltoall, ScheduleBuilder
 from repro.core.engine import EngineConfig
+from repro.core.scenario import CollectiveSpec, FabricSpec, ScenarioSpec
 from repro.core.sweep import SweepRunner
-from repro.core.topology import clos
 
 POLICIES = ("pfc", "dcqcn", "dctcp", "timely", "hpcc", "static_window")
+FABRIC = FabricSpec(family="clos", n_racks=4, nodes_per_rack=2,
+                    gpus_per_node=8, oversubscription=2.0)  # 64 GPUs, 8 spines
 
 
 def arch_comm_profile(rec):
@@ -35,30 +36,23 @@ def arch_comm_profile(rec):
     return ar, a2a
 
 
-def build_equiv_schedule(topo, n, ar_bytes_per_gpu, a2a_bytes_per_gpu):
+def equiv_workloads(fab: FabricSpec, ar_bytes_per_gpu, a2a_bytes_per_gpu):
     """Size collectives so each GPU's NIC moves the measured bytes."""
-    gpus = list(range(n))
-    gpn = topo.meta["gpus_per_node"]
+    n, gpn = fab.n_gpus, fab.gpus_per_node
     n_nodes = n // gpn
-    b = ScheduleBuilder(topo)
+    out = []
     # hierarchical AR: NIC bytes/GPU = 2*S*(n_nodes-1)/(gpn*n_nodes)
     if ar_bytes_per_gpu > 0:
         S_ar = ar_bytes_per_gpu * gpn * n_nodes / (2 * max(n_nodes - 1, 1))
-        sched_ar = allreduce_2d(topo, gpus, S_ar, n_chunks=2)
-    else:
-        sched_ar = None
+        out.append(CollectiveSpec("2d", S_ar, n_chunks=2))
     if a2a_bytes_per_gpu > 0:
         # direct a2a: NIC bytes/GPU ~ S*(n - gpn)/n
         S_a2a = a2a_bytes_per_gpu * n / max(n - gpn, 1)
-        sched_a2a = alltoall(topo, gpus, S_a2a, n_chunks=2)
-    else:
-        sched_a2a = None
-    return sched_ar, sched_a2a
+        out.append(CollectiveSpec("a2a", S_a2a, n_chunks=2))
+    return out
 
 
 def main():
-    topo = clos(n_racks=4, nodes_per_rack=2, gpus_per_node=8)  # 64 GPUs
-    n = 64
     cfg = EngineConfig(dt=4e-6, max_steps=4000, max_extends=6, queue_stride=0)
     # one runner across all archs: equal-shaped schedules (same topo, same
     # chunking) hit the same compiled engine instead of retracing per arch
@@ -78,14 +72,12 @@ def main():
         # fluid sim stays ~4 ms of fabric time (a full step is seconds);
         # relative CC sensitivity is scale-free for long flows
         scale = min(1.0, 100e6 / max(ar + a2a, 1.0))
-        sar, sa2a = build_equiv_schedule(topo, n, ar * scale, a2a * scale)
+        workloads = equiv_workloads(FABRIC, ar * scale, a2a * scale)
         times = []
         for pol in POLICIES:
             t = 0.0
-            for sched in (sar, sa2a):
-                if sched is None:
-                    continue
-                r = runner.run(topo, sched, get_policy(pol))
+            for wl in workloads:
+                r = runner.run_spec(ScenarioSpec(FABRIC, wl, pol))
                 t += r.completion_time if r.finished else float("nan")
             times.append(t)
         base = times[0]

@@ -32,13 +32,17 @@ def train_demo():
 
 
 def netsim_demo():
-    from repro.core import EngineConfig, get_policy, incast, simulate, single_switch
-    topo = single_switch(8)
-    sched = incast(topo, list(range(1, 8)), 0, 10e6)
-    cfg = EngineConfig(dt=1e-6, max_steps=2000, max_extends=5)
+    # declarative scenario layer: one spec per simulation point, one shared
+    # runner (same-shaped specs reuse compiled engines)
+    from repro.core import (EngineConfig, FabricSpec, IncastSpec,
+                            ScenarioSpec, SweepRunner)
+    fab = FabricSpec(family="single", n_racks=1, nodes_per_rack=1,
+                     gpus_per_node=8)
+    wl = IncastSpec(n_senders=7, size_each=10e6)
+    runner = SweepRunner(EngineConfig(dt=1e-6, max_steps=2000, max_extends=5))
     print("  policy          completion   max switch queue   PAUSE frames")
     for name in ("pfc", "dcqcn", "timely"):
-        r = simulate(topo, sched, get_policy(name), cfg)
+        r = runner.run_spec(ScenarioSpec(fab, wl, name))
         q = r.dev_queue[:, 8].max() / 1e6
         print(f"  {name:14s} {r.completion_time*1e3:8.3f} ms {q:12.2f} MB"
               f" {int(r.pause_count.sum()):10d}")

@@ -2,11 +2,31 @@
 RoCE congestion control for distributed training (see DESIGN.md)."""
 from repro.core.cc import ALL_POLICIES, get_policy  # noqa: F401
 from repro.core.collectives import (  # noqa: F401
+    COLLECTIVES,
     allreduce_1d,
     allreduce_2d,
+    allreduce_hring,
+    allreduce_ring,
     alltoall,
+    get_collective,
     incast,
+    register_collective,
 )
-from repro.core.engine import EngineConfig, Results, Simulator, simulate  # noqa: F401
-from repro.core.sweep import BatchResults, SweepRunner  # noqa: F401
-from repro.core.topology import clos, single_switch  # noqa: F401
+from repro.core.engine import (  # noqa: F401
+    EngineConfig,
+    FabricParams,
+    Results,
+    Simulator,
+    simulate,
+)
+from repro.core.scenario import (  # noqa: F401
+    TOPOLOGIES,
+    CollectiveSpec,
+    FabricSpec,
+    IncastSpec,
+    ScenarioSpec,
+    register_topology,
+    scenario_matrix,
+)
+from repro.core.sweep import BatchResults, SweepRunner, compile_stats  # noqa: F401
+from repro.core.topology import LINK_CLASSES, clos, single_switch  # noqa: F401

@@ -1,13 +1,15 @@
-"""Differentiable CC parameter tuning (beyond-paper).
+"""Differentiable CC *and fabric* parameter tuning (beyond-paper).
 
 The paper: "DCQCN has many parameters that need to be tuned for better
 performance ... tuning the congestion control hyperparameter before
 running every deep learning workload is not a feasible solution."
 
 Because our fluid network layer is pure JAX, the *whole simulation* is
-differentiable w.r.t. the CC policy parameters.  We tune them by gradient
-descent on a soft objective (integral of undelivered traffic fraction +
-PFC pressure), replacing the paper's manual grid search.
+differentiable w.r.t. the CC policy parameters — and, since the scenario
+refactor, w.r.t. the fabric's ECN/PFC knobs (``FabricParams``) too.  We
+tune them by gradient descent on a soft objective (integral of undelivered
+traffic fraction + PFC pressure), replacing the paper's manual grid
+search.
 
 Population-based tuning: with ``population > 1`` the search runs a whole
 population of (log-space) parameter vectors through one ``vmap``-batched
@@ -26,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cc import Policy
-from repro.core.engine import EngineConfig, Simulator
+from repro.core.engine import EngineConfig, FabricParams, Simulator, _as_fabric
 
 
 @dataclasses.dataclass
@@ -35,40 +37,70 @@ class TuneResult:
     history: list
     baseline_cost: float
     tuned_cost: float
+    fabric: FabricParams | None = None   # tuned fabric (when fabric_keys set)
 
 
 def autotune(topo, sched, policy: Policy, tune_keys: list[str],
              steps: int = 12, lr: float = 0.15,
              cfg: EngineConfig | None = None,
-             population: int = 1, spread: float = 0.4) -> TuneResult:
+             population: int = 1, spread: float = 0.4,
+             fabric_params: FabricParams | None = None,
+             fabric_keys: list[str] | None = None,
+             cc_params: dict | None = None) -> TuneResult:
     """Gradient-descent the selected (log-space) params of ``policy``.
 
     ``population`` > 1 tunes that many jittered members in one vmapped
     simulation per step (population-based tuning); the best member wins.
+    ``fabric_keys`` additionally tunes the named ``FabricParams`` fields
+    (e.g. ``["kmin", "xoff"]``) through the same objective — the fabric is
+    a traced input, so this costs no extra compiles.  ``cc_params``
+    overrides the policy defaults for the *untuned* starting point (a
+    ScenarioSpec's per-run overrides arrive here via ``autotune_spec``).
     """
     policy.check_tunable(tune_keys)
+    if cc_params:
+        policy.check_tunable(cc_params)
+    fabric_keys = list(fabric_keys or [])
+    FabricParams.check_fields(fabric_keys)
     cfg = cfg or EngineConfig(dt=2e-6, max_steps=2500, max_extends=0,
                               queue_stride=0)
-    sim = Simulator(topo, sched, policy, cfg)
+    sim = Simulator(topo, sched, policy, cfg, fabric_params=fabric_params)
     cost_of_params = sim.soft_cost_fn()
 
-    base = dict(policy.params)
+    base = dict(policy.params, **(cc_params or {}))
+    base_fab = _as_fabric(fabric_params, cfg)
+    for k in fabric_keys:
+        if np.asarray(getattr(base_fab, k)).ndim > 0:
+            raise ValueError(
+                f"fabric param {k!r} holds a per-link-class array; autotune "
+                "tunes scalar fabric leaves only — tune a scalar base and "
+                "apply with_class afterwards")
+    all_keys = list(tune_keys) + [f"fabric.{k}" for k in fabric_keys]
 
     def cost_fn(logp):
         params = dict(base)
+        fab_over = {}
         for k, v in logp.items():
-            params[k] = jnp.exp(v)
-        return cost_of_params(params)
+            if k.startswith("fabric."):
+                fab_over[k[len("fabric."):]] = jnp.exp(v)
+            else:
+                params[k] = jnp.exp(v)
+        fab = base_fab.replace(**fab_over) if fab_over else base_fab
+        return cost_of_params(params, fab)
+
+    def start_val(k):
+        if k.startswith("fabric."):
+            return float(np.asarray(getattr(base_fab, k[len("fabric."):])))
+        return float(base[k])
 
     P = max(int(population), 1)
     # deterministic log-space jitter; member 0 sits exactly at the defaults
     rng = np.random.default_rng(0)
-    offs = np.zeros((P, len(tune_keys)), np.float32)
+    offs = np.zeros((P, len(all_keys)), np.float32)
     if P > 1:
-        offs[1:] = rng.uniform(-spread, spread, size=(P - 1, len(tune_keys)))
-    logp = {k: jnp.asarray(np.log(float(base[k])) + offs[:, i],
-                           jnp.float32)
-            for i, k in enumerate(tune_keys)}
+        offs[1:] = rng.uniform(-spread, spread, size=(P - 1, len(all_keys)))
+    logp = {k: jnp.asarray(np.log(start_val(k)) + offs[:, i], jnp.float32)
+            for i, k in enumerate(all_keys)}
 
     vg = jax.jit(jax.vmap(jax.value_and_grad(cost_fn)))
     hist = []
@@ -95,6 +127,22 @@ def autotune(topo, sched, policy: Policy, tune_keys: list[str],
         j = int(np.argmin(c))
         baseline, best = float(c[0]), float(c[j])
         best_logp = {k: float(np.asarray(v)[j]) for k, v in logp.items()}
-    tuned = {k: float(np.exp(v)) for k, v in best_logp.items()}
+    tuned = {k: float(np.exp(v)) for k, v in best_logp.items()
+             if not k.startswith("fabric.")}
+    tuned_fab = None
+    if fabric_keys:
+        tuned_fab = base_fab.replace(
+            **{k[len("fabric."):]: float(np.exp(v))
+               for k, v in best_logp.items() if k.startswith("fabric.")})
     return TuneResult(params=dict(base, **tuned), history=hist,
-                      baseline_cost=baseline, tuned_cost=best)
+                      baseline_cost=baseline, tuned_cost=best,
+                      fabric=tuned_fab)
+
+
+def autotune_spec(spec, tune_keys: list[str], **kw) -> TuneResult:
+    """Declarative entry: tune a ``ScenarioSpec``'s policy (and optionally
+    fabric) in place of the (topo, sched, policy) triple."""
+    topo, sched, policy = spec.build()
+    kw.setdefault("fabric_params", spec.fabric_params)
+    kw.setdefault("cc_params", spec.cc_params)
+    return autotune(topo, sched, policy, tune_keys, **kw)

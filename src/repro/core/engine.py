@@ -45,10 +45,20 @@ The per-device queue timeline (``Results.dev_queue``, consumed only by the
 Fig 5-7 style plots) is recorded every ``cfg.queue_stride`` steps, or not
 at all with ``queue_stride=0`` — the recommended setting for sweeps.
 
+Dynamic fabric parameters
+-------------------------
+ECN marking (kmin/kmax/pmax) and PFC thresholds (xoff/xon) are *traced*
+inputs — a ``FabricParams`` pytree passed alongside ``cc_params`` — not
+static config.  Leaves may be scalars or per-link-class arrays (indexed by
+``topology.LINK_CLASSES``), so fabric-tuning grids vmap-batch through
+``SweepRunner`` without recompiling and ``soft_cost`` differentiates
+through fabric knobs as well as CC parameters.
+
 Batched sweeps over CC parameters (vmap) and the cross-scenario compile
 cache live in ``repro.core.sweep`` (``SweepRunner``); compiled step
 functions here are keyed on ``(policy, cfg, static plan)`` so same-shaped
-scenarios never retrace.
+scenarios never retrace.  Declarative scenario construction
+(``ScenarioSpec``) lives in ``repro.core.scenario``.
 """
 from __future__ import annotations
 
@@ -62,7 +72,8 @@ from jax import lax
 
 from repro.core.cc import Policy
 from repro.core.collectives import Schedule
-from repro.core.topology import MAXHOP, Topology
+from repro.core.topology import (LINK_CLASS_ID, MAXHOP, N_LINK_CLASSES,
+                                 Topology)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,8 +82,11 @@ class EngineConfig:
     max_steps: int = 20_000
     max_extends: int = 4          # extra step budget: total = max_steps*(1+extends)
     hist: int = 512               # feedback delay ring cap (steps)
-    # ECN / RED marking at switch egress queues
-    kmin: float = 400e3
+    # ECN / PFC *defaults*: these scalars only seed the default
+    # ``FabricParams`` (the dynamic, traced fabric knobs passed alongside
+    # cc_params); the compiled step never reads them, so two configs
+    # differing only here share one executable (see ``_cfg_static``)
+    kmin: float = 400e3           # ECN / RED marking at switch egress queues
     kmax: float = 1600e3
     pmax: float = 0.2
     # PFC per-ingress-port hysteresis (bytes queued in the switch that
@@ -85,6 +99,81 @@ class EngineConfig:
     # hot-path knobs (do not change simulated physics)
     chunk_steps: int = 256        # early-exit check granularity (in-jit)
     queue_stride: int = 1         # record dev_queue every k steps; 0 = off
+
+
+_FABRIC_DEFAULTS = dict(kmin=400e3, kmax=1600e3, pmax=0.2, xoff=1e6, xon=0.8e6)
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricParams:
+    """Dynamic fabric tuning knobs: a pytree traced alongside ``cc_params``.
+
+    Each leaf is either a scalar (uniform fabric) or a per-link-class array
+    of shape ``(N_LINK_CLASSES,)`` indexed by ``topology.LINK_CLASSES``, so
+    e.g. spine downlinks can mark earlier than ToR downlinks.  Leaves ride
+    through jit/vmap/grad: fabric-parameter grids batch through
+    ``SweepRunner`` without recompiling, and ``soft_cost`` differentiates
+    through them.  Scalar defaults reproduce the historical
+    ``EngineConfig`` behavior bit-for-bit.
+    """
+    kmin: object = _FABRIC_DEFAULTS["kmin"]   # ECN marking ramp start (bytes)
+    kmax: object = _FABRIC_DEFAULTS["kmax"]   # ECN marking ramp end (bytes)
+    pmax: object = _FABRIC_DEFAULTS["pmax"]   # max marking probability
+    xoff: object = _FABRIC_DEFAULTS["xoff"]   # PFC pause threshold (bytes)
+    xon: object = _FABRIC_DEFAULTS["xon"]     # PFC resume threshold (bytes)
+
+    FIELDS = ("kmin", "kmax", "pmax", "xoff", "xon")
+
+    @classmethod
+    def from_config(cls, cfg: EngineConfig) -> "FabricParams":
+        return cls(kmin=cfg.kmin, kmax=cfg.kmax, pmax=cfg.pmax,
+                   xoff=cfg.xoff, xon=cfg.xon)
+
+    @classmethod
+    def check_fields(cls, keys):
+        """Reject names that are not FabricParams fields."""
+        unknown = set(keys) - set(cls.FIELDS)
+        if unknown:
+            raise ValueError(f"unknown fabric params {sorted(unknown)}; "
+                             f"known: {list(cls.FIELDS)}")
+
+    def replace(self, **kw) -> "FabricParams":
+        return dataclasses.replace(self, **kw)
+
+    def with_class(self, **field_overrides) -> "FabricParams":
+        """Per-link-class overrides: ``fab.with_class(kmin={"spine_down":
+        100e3})`` expands ``kmin`` to a per-class array with the named
+        classes replaced and every other class at this instance's value."""
+        out = {}
+        for field, overrides in field_overrides.items():
+            base = np.broadcast_to(
+                np.asarray(getattr(self, field), np.float32),
+                (N_LINK_CLASSES,)).copy()
+            for cls_name, v in overrides.items():
+                base[LINK_CLASS_ID[cls_name]] = v
+            out[field] = base
+        return dataclasses.replace(self, **out)
+
+
+jax.tree_util.register_dataclass(FabricParams,
+                                 data_fields=FabricParams.FIELDS,
+                                 meta_fields=())
+
+
+def _as_fabric(fabric_params, cfg: EngineConfig) -> FabricParams:
+    return (FabricParams.from_config(cfg) if fabric_params is None
+            else fabric_params)
+
+
+def _per_class(v):
+    """Broadcast a FabricParams leaf to one value per link class."""
+    return jnp.broadcast_to(jnp.asarray(v, jnp.float32), (N_LINK_CLASSES,))
+
+
+def _cfg_static(cfg: EngineConfig) -> EngineConfig:
+    """The compile-cache view of a config: fabric scalars are dynamic
+    (delivered via FabricParams), so they are normalized out of the key."""
+    return dataclasses.replace(cfg, **_FABRIC_DEFAULTS)
 
 
 @dataclasses.dataclass
@@ -233,6 +322,9 @@ def _prep(topo: Topology, sched: Schedule, cfg: EngineConfig,
     lat = np.concatenate([topo.lat, [0.0]]).astype(np.float32)
     ecn_on = np.concatenate([topo.ecn_on, [False]])
     dst_dev = np.concatenate([topo.dst_dev, [topo.n_devices]]).astype(np.int32)
+    # fabric-link class per link; the null link (Lk) never marks ECN and
+    # never pauses, so its class is irrelevant — use 0
+    link_class = np.concatenate([topo.link_class, [0]]).astype(np.int32)
 
     # ingress map: backlog at hop h arrived via link path[:, h-1] (h >= 1);
     # hop-0 backlog is the host's own send queue (never paused by PFC)
@@ -326,6 +418,8 @@ def _prep(topo: Topology, sched: Schedule, cfg: EngineConfig,
         hopmask=jnp.asarray(hopmask),
         caps_path=jnp.asarray(cap[path]),
         ecn_mask=jnp.asarray((ecn_on[path] & hopmask).astype(np.float32)),
+        link_class=jnp.asarray(link_class),
+        cls_path=jnp.asarray(link_class[path]),
         n_hops=jnp.asarray(n_hops),
         base_rtt=jnp.asarray(base_rtt), delay_steps=jnp.asarray(delay_steps),
         line=jnp.asarray(line), bdp=jnp.asarray(bdp),
@@ -390,9 +484,13 @@ def _make_step(policy: Policy, cfg: EngineConfig, plan: _Plan):
     stride = cfg.queue_stride
     n_qrows = _n_qrows(cfg)
 
-    def step(carry, it, pp, cc_params):
+    def step(carry, it, pp, cc_params, fab):
         path, hopmask = pp["path"], pp["hopmask"]
         t = it.astype(jnp.float32) * dt
+        # per-link-class fabric knobs (scalar leaves broadcast to uniform)
+        kmin_h = _per_class(fab.kmin)[pp["cls_path"]]     # (F, MAXHOP)
+        kmax_h = _per_class(fab.kmax)[pp["cls_path"]]
+        pmax_h = _per_class(fab.pmax)[pp["cls_path"]]
         # ---- 1. delayed signals ------------------------------------------
         idx = jnp.maximum(it - pp["delay_steps"], 0) % plan.ring
         flat = idx[:, None] * (Lk + 1) + path            # (F, MAXHOP)
@@ -400,7 +498,8 @@ def _make_step(policy: Policy, cfg: EngineConfig, plan: _Plan):
         tx_d = carry["hist_tx"].reshape(-1)[flat]
         caps = pp["caps_path"]
         rtt = pp["base_rtt"] + (q_d / caps * hopmask).sum(1)
-        mark = jnp.clip((q_d - cfg.kmin) / (cfg.kmax - cfg.kmin), 0.0, 1.0) * cfg.pmax
+        mark = jnp.clip((q_d - kmin_h) / jnp.maximum(kmax_h - kmin_h, 1.0),
+                        0.0, 1.0) * pmax_h
         mark = mark * pp["ecn_mask"]
         ecn = 1.0 - jnp.prod(1.0 - mark, axis=1)
         util_l = tx_d / caps + q_d / (caps * cfg.t_base_util)
@@ -456,8 +555,10 @@ def _make_step(policy: Policy, cfg: EngineConfig, plan: _Plan):
         q_port = _reduce(plan.qport, pp["r_qport"], backlog.reshape(-1))
 
         # ---- 7. PFC per-port hysteresis --------------------------------------
-        over = (q_port > cfg.xoff) & pp["can_pause"]
-        under = q_port < cfg.xon
+        xoff_l = _per_class(fab.xoff)[pp["link_class"]]   # (Lk+1,)
+        xon_l = _per_class(fab.xon)[pp["link_class"]]
+        over = (q_port > xoff_l) & pp["can_pause"]
+        under = q_port < xon_l
         paused = jnp.where(over, True, jnp.where(under, False, carry["paused"]))
         # PAUSE frames: one on the off-transition + periodic refreshes while
         # the port stays paused (how NS3 counts them)
@@ -516,11 +617,11 @@ def _make_run(policy: Policy, cfg: EngineConfig, plan: _Plan,
     total = cfg.max_steps * (cfg.max_extends + 1)
     chunk = max(1, min(cfg.chunk_steps, total))
 
-    def run(carry, pp, cc_params):
+    def run(carry, pp, cc_params, fab):
         def body(c, it):
             c2 = lax.cond(jnp.all(c["done"]) | (it >= total),
                           lambda c: c,
-                          lambda c: step(c, it, pp, cc_params),
+                          lambda c: step(c, it, pp, cc_params, fab),
                           c)
             return c2, None
 
@@ -565,8 +666,10 @@ def compiled_run(policy: Policy, cfg: EngineConfig, plan: _Plan,
     """Jitted stepping loop, cached across scenarios with equal plans.
 
     The carry (arg 0) is donated: every run must pass a freshly built one.
+    Fabric scalars on ``cfg`` are normalized out of the key (they arrive
+    traced via FabricParams), so a fabric sweep never recompiles.
     """
-    key = (_policy_cache_key(policy), cfg, plan, early_exit)
+    key = (_policy_cache_key(policy), _cfg_static(cfg), plan, early_exit)
     if key not in _RUN_CACHE:
         run = _make_run(policy, cfg, plan, early_exit)
         _RUN_CACHE[key] = jax.jit(run, donate_argnums=(0,))
@@ -582,16 +685,20 @@ class Simulator:
 
     def __init__(self, topo: Topology, sched: Schedule, policy: Policy,
                  cfg: EngineConfig = EngineConfig(),
-                 pad_flows: int | None = None, pad_groups: int | None = None):
+                 pad_flows: int | None = None, pad_groups: int | None = None,
+                 fabric_params: FabricParams | None = None):
         self.topo, self.sched, self.policy, self.cfg = topo, sched, policy, cfg
+        self.fabric = _as_fabric(fabric_params, cfg)
         self.pp, self.plan = _prep(topo, sched, cfg, pad_flows, pad_groups)
         self._soft_jit = None
 
-    def run(self, cc_params: dict | None = None, early_exit: bool = True) -> Results:
+    def run(self, cc_params: dict | None = None, early_exit: bool = True,
+            fabric_params: FabricParams | None = None) -> Results:
         params = cc_params if cc_params is not None else self.policy.params
+        fab = fabric_params if fabric_params is not None else self.fabric
         fn = compiled_run(self.policy, self.cfg, self.plan, early_exit)
         carry = _init_carry(self.pp, self.plan, self.policy, self.cfg)
-        carry, steps = fn(carry, self.pp, params)
+        carry, steps = fn(carry, self.pp, params, fab)
         return self._results(carry, int(steps))
 
     def _results(self, carry, steps_run: int) -> Results:
@@ -622,7 +729,8 @@ class Simulator:
 
     # -- differentiable objective -------------------------------------------
     def soft_cost_fn(self):
-        """Pure ``cc_params -> soft_cost`` suitable for grad/vmap/jit.
+        """Pure ``(cc_params, fabric_params=default) -> soft_cost`` suitable
+        for grad/vmap/jit — differentiable through the fabric knobs too.
 
         Uses the monolithic (fixed-length) scan: ``lax.while_loop`` is not
         reverse-mode differentiable.  The integrand freezes once every flow
@@ -631,23 +739,29 @@ class Simulator:
         """
         run = _make_run(self.policy, self.cfg, self.plan, early_exit=False)
         pp, plan, policy, cfg = self.pp, self.plan, self.policy, self.cfg
+        default_fab = self.fabric
 
-        def cost(cc_params):
+        def cost(cc_params, fabric_params=default_fab):
             carry = _init_carry(pp, plan, policy, cfg)
-            carry, _ = run(carry, pp, cc_params)
+            carry, _ = run(carry, pp, cc_params, fabric_params)
             return carry["soft"]
 
         return cost
 
-    def soft_cost(self, cc_params) -> jnp.ndarray:
+    def soft_cost(self, cc_params,
+                  fabric_params: FabricParams | None = None) -> jnp.ndarray:
         """Differentiable objective: integral of undelivered fraction.
 
         Jitted and cached per Simulator; compose ``soft_cost_fn`` yourself
         for grad/vmap pipelines (as ``core/autotune.py`` does)."""
         if self._soft_jit is None:
             self._soft_jit = jax.jit(self.soft_cost_fn())
-        return self._soft_jit(cc_params)
+        return self._soft_jit(cc_params,
+                              fabric_params if fabric_params is not None
+                              else self.fabric)
 
 
-def simulate(topo, sched, policy, cfg: EngineConfig = EngineConfig()) -> Results:
-    return Simulator(topo, sched, policy, cfg).run()
+def simulate(topo, sched, policy, cfg: EngineConfig = EngineConfig(),
+             fabric_params: FabricParams | None = None) -> Results:
+    return Simulator(topo, sched, policy, cfg,
+                     fabric_params=fabric_params).run()

@@ -37,8 +37,10 @@ _GROUPS_RE = re.compile(r"replica_groups=\{(\{[0-9, ]+\}(?:,\{[0-9, ]+\})*)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class CollectiveOp:
+    """Frozen (hashable) so HLO-replay scenario workloads can key the
+    schedule memoization in ``scenario.ScenarioSpec.build``."""
     kind: str
     bytes_total: int        # sum of operand bytes (global, all shards)
     group_size: int         # participants per replica group

@@ -6,6 +6,11 @@ collective mix is extracted from the compiled dry-run HLO (hlo_comm), the
 mesh axes are mapped onto the paper's CLOS fabric, and one training
 iteration's communication is simulated under each CC policy.
 
+The HLO replay is a scenario workload (``HLOReplaySpec``): drivers build
+``ScenarioSpec(fabric, HLOReplaySpec(...), policy)`` per policy and hand
+the list to a shared ``SweepRunner`` — no ad-hoc topology/schedule/policy
+assembly.
+
 Mesh->fabric mapping: mesh devices are laid out row-major (pod, data,
 model); chips are packed 8 per node.  A "model"-axis collective therefore
 spans consecutive chips (mostly intra-node NVLink + intra-rack NICs) while
@@ -19,11 +24,12 @@ import dataclasses
 import numpy as np
 
 from repro.core import cc as cc_mod
-from repro.core.collectives import ScheduleBuilder, _direct_phase
+from repro.core.collectives import Schedule, ScheduleBuilder, _direct_phase
 from repro.core.engine import EngineConfig
 from repro.core.hlo_comm import CollectiveOp
+from repro.core.scenario import FabricSpec, ScenarioSpec
 from repro.core.sweep import SweepRunner
-from repro.core.topology import Topology, clos
+from repro.core.topology import Topology
 
 
 @dataclasses.dataclass
@@ -46,7 +52,7 @@ def mesh_groups(mesh_shape: tuple[int, ...], axis: int, n_gpus: int) -> list[lis
 
 def schedule_from_ops(topo: Topology, ops: list[CollectiveOp],
                       mesh_shape: tuple[int, ...],
-                      axis_of_op: list[int], n_chunks: int = 4):
+                      axis_of_op: list[int], n_chunks: int = 4) -> Schedule:
     """Build a flow schedule replaying `ops` (op k over mesh axis
     axis_of_op[k]), chunked and chained like the workload layer does."""
     b = ScheduleBuilder(topo)
@@ -70,21 +76,40 @@ def schedule_from_ops(topo: Topology, ops: list[CollectiveOp],
     return b.build()
 
 
+@dataclasses.dataclass(frozen=True)
+class HLOReplaySpec:
+    """Scenario workload replaying a dry-run's collective mix."""
+    ops: tuple                     # tuple[CollectiveOp, ...]
+    mesh_shape: tuple
+    axis_of_op: tuple
+    n_chunks: int = 4
+
+    def build_schedule(self, topo: Topology) -> Schedule:
+        return schedule_from_ops(topo, list(self.ops), self.mesh_shape,
+                                 list(self.axis_of_op), self.n_chunks)
+
+
 def predict_policies(ops, mesh_shape, axis_of_op, policies=None,
                      topo: Topology | None = None,
                      cfg: EngineConfig | None = None,
-                     runner: SweepRunner | None = None) -> list[PredictReport]:
+                     runner: SweepRunner | None = None,
+                     fabric: FabricSpec | None = None) -> list[PredictReport]:
     """Reports don't consume queue timelines, so recording is off; pass a
     shared ``runner`` to reuse compiled engines across calls (shape-bucket
     padding makes same-sized schedules hit the same executable)."""
-    topo = topo or clos(n_racks=2, nodes_per_rack=2, gpus_per_node=8)
+    # oversubscription=2.0 == the seed clos() default of 8 spines
+    fab = fabric if fabric is not None else \
+        (topo if topo is not None
+         else FabricSpec(family="clos", n_racks=2, nodes_per_rack=2,
+                         gpus_per_node=8, oversubscription=2.0))
     cfg = cfg or EngineConfig(dt=2e-6, max_steps=4000, max_extends=6,
                               queue_stride=0)
     runner = runner or SweepRunner(cfg)
-    sched = schedule_from_ops(topo, ops, mesh_shape, axis_of_op)
+    workload = HLOReplaySpec(tuple(ops), tuple(mesh_shape), tuple(axis_of_op))
+    specs = [ScenarioSpec(fabric=fab, workload=workload, policy=p)
+             for p in (policies or cc_mod.ALL_POLICIES)]
     out = []
-    for res in runner.run_policies(topo, sched,
-                                   policies or cc_mod.ALL_POLICIES, cfg=cfg):
+    for res in runner.run_specs(specs, cfg=cfg):
         out.append(PredictReport(res.meta["policy"], res.completion_time,
                                  float(res.pause_count.sum()), res.finished))
     return out

@@ -1,0 +1,236 @@
+"""Declarative scenario layer: every simulation point as one spec.
+
+The paper's result set is a sweep over CC policy x collective x topology x
+fabric tuning (Figs 3-11), and follow-up work (Hoefler et al., Mittal et
+al.) shows conclusions hinge on fabric parameters.  This module makes each
+point of that space a value, not a code path:
+
+    FabricSpec    -- topology family + BW/latency/buffer/oversubscription
+                     (built via the TOPOLOGIES registry, cached by value)
+    ScenarioSpec  -- fabric x workload x CC policy x FabricParams
+
+Workloads are anything with ``build_schedule(topo) -> Schedule``:
+``CollectiveSpec`` enumerates the registered collective algorithms
+(``collectives.COLLECTIVES`` -- the paper's 1D/2D/ring/a2a axis),
+``IncastSpec`` covers the microbenchmarks, and the workload layer adds
+``DLRMIterationSpec`` (repro.core.workload) / ``HLOReplaySpec``
+(repro.core.predict).
+
+``SweepRunner`` (repro.core.sweep) consumes specs directly: same-shaped
+specs share compiled engines, and CC x fabric parameter grids batch
+through one vmapped dispatch.
+
+    spec = ScenarioSpec(fabric=FabricSpec(n_racks=2),
+                        workload=CollectiveSpec("ring", 64e6),
+                        policy="dcqcn")
+    res = spec.run()
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.core.cc import Policy, get_policy
+from repro.core.collectives import Schedule, get_collective, incast
+from repro.core.engine import EngineConfig, FabricParams, Results
+from repro.core.topology import (NIC_BW, NIC_LAT, NVLINK_BW, NVLINK_LAT,
+                                 SWITCH_BUF, Topology)
+from repro.core import topology as topo_mod
+
+# ---------------------------------------------------------------------------
+# topology-family registry
+# ---------------------------------------------------------------------------
+
+TOPOLOGIES: dict[str, Callable] = {}
+
+
+def register_topology(name: str):
+    """Register ``fn(spec: FabricSpec) -> Topology`` under ``name``."""
+    def deco(fn):
+        if name in TOPOLOGIES:
+            raise ValueError(f"topology family {name!r} already registered")
+        TOPOLOGIES[name] = fn
+        return fn
+    return deco
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricSpec:
+    """Declarative fabric: family + scale + link speeds + oversubscription.
+
+    ``n_spines=None`` derives the spine count from ``oversubscription``:
+    full bisection gives every ToR one uplink per NIC downlink
+    (``nodes_per_rack * gpus_per_node`` spines); oversubscription > 1
+    divides that (e.g. 2.0 -> half the spines, the Fig-5 imbalance regime).
+    """
+    family: str = "clos"
+    n_racks: int = 2
+    nodes_per_rack: int = 2
+    gpus_per_node: int = 8
+    n_spines: int | None = None
+    oversubscription: float = 1.0
+    nic_bw: float = NIC_BW
+    nic_lat: float = NIC_LAT
+    nv_bw: float = NVLINK_BW
+    nv_lat: float = NVLINK_LAT
+    buf: float = SWITCH_BUF
+
+    @property
+    def n_gpus(self) -> int:
+        return self.n_racks * self.nodes_per_rack * self.gpus_per_node
+
+    @property
+    def spine_count(self) -> int:
+        if self.n_spines is not None:
+            return self.n_spines
+        full = self.nodes_per_rack * self.gpus_per_node
+        return max(1, round(full / self.oversubscription))
+
+    def build(self) -> Topology:
+        """Build (or fetch the cached) Topology for this spec."""
+        topo = _TOPO_CACHE.get(self)
+        if topo is None:
+            try:
+                builder = TOPOLOGIES[self.family]
+            except KeyError:
+                raise KeyError(f"unknown topology family {self.family!r}; "
+                               f"registered: {sorted(TOPOLOGIES)}") from None
+            topo = builder(self)
+            while len(_TOPO_CACHE) >= _TOPO_CACHE_MAX:
+                _TOPO_CACHE.pop(next(iter(_TOPO_CACHE)))
+            _TOPO_CACHE[self] = topo
+        return topo
+
+
+_TOPO_CACHE: dict = {}
+_TOPO_CACHE_MAX = 32
+# (FabricSpec, workload) -> Schedule; Schedules are plain frozen numpy
+_SCHED_CACHE: dict = {}
+_SCHED_CACHE_MAX = 64
+
+
+@register_topology("clos")
+def _build_clos(spec: FabricSpec) -> Topology:
+    return topo_mod.clos(n_racks=spec.n_racks,
+                         nodes_per_rack=spec.nodes_per_rack,
+                         gpus_per_node=spec.gpus_per_node,
+                         n_spines=spec.spine_count,
+                         nic_bw=spec.nic_bw, nic_lat=spec.nic_lat,
+                         nv_bw=spec.nv_bw, nv_lat=spec.nv_lat,
+                         buf=spec.buf)
+
+
+@register_topology("single")
+def _build_single(spec: FabricSpec) -> Topology:
+    return topo_mod.single_switch(spec.n_gpus, bw=spec.nic_bw,
+                                  lat=spec.nic_lat, buf=spec.buf)
+
+
+# ---------------------------------------------------------------------------
+# workload specs (anything with build_schedule(topo) -> Schedule)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveSpec:
+    """One collective from the registry over all (or selected) GPUs."""
+    kind: str                      # name in collectives.COLLECTIVES
+    total_bytes: float
+    n_chunks: int = 4
+    gpus: tuple | None = None      # None -> every fabric GPU
+
+    def build_schedule(self, topo: Topology) -> Schedule:
+        gpus = (list(self.gpus) if self.gpus is not None
+                else list(range(topo.n_gpus)))
+        return get_collective(self.kind)(topo, gpus, self.total_bytes,
+                                         n_chunks=self.n_chunks)
+
+
+@dataclasses.dataclass(frozen=True)
+class IncastSpec:
+    """The paper's Fig-3 microbenchmark: N senders into one receiver."""
+    n_senders: int
+    size_each: float
+    dst: int = 0
+
+    def build_schedule(self, topo: Topology) -> Schedule:
+        senders = [g for g in range(topo.n_gpus) if g != self.dst]
+        if len(senders) < self.n_senders:
+            raise ValueError(
+                f"IncastSpec wants {self.n_senders} senders but the fabric "
+                f"has only {len(senders)} GPUs besides dst={self.dst}")
+        return incast(topo, senders[:self.n_senders], self.dst,
+                      self.size_each)
+
+
+# ---------------------------------------------------------------------------
+# the scenario spec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """One fully-specified simulation point.
+
+    ``policy`` is a registry name or a ``Policy``; ``cc_params`` and
+    ``fabric_params`` are traced per-run overrides, so specs differing only
+    there share one compiled engine (and can be batched -- see
+    ``SweepRunner.grid_spec``).  ``fabric`` is normally a declarative
+    ``FabricSpec``; a prebuilt ``Topology`` is also accepted so callers
+    holding one (tests, calibration drivers) can still ride the spec path.
+    """
+    fabric: object                 # FabricSpec | Topology
+    workload: object               # has build_schedule(topo) -> Schedule
+    policy: object = "pfc"         # str (cc.REGISTRY name) or Policy
+    cc_params: dict | None = None
+    fabric_params: FabricParams | None = None
+    name: str = ""
+
+    def build(self):
+        """-> (topo, sched, policy).  Topology construction is cached by
+        FabricSpec value, and schedules are memoized by (FabricSpec,
+        workload) value when both are hashable — a per-policy spec list
+        over one workload routes each flow once, not once per policy."""
+        topo = (self.fabric if isinstance(self.fabric, Topology)
+                else self.fabric.build())
+        key = None
+        if isinstance(self.fabric, FabricSpec):
+            try:
+                hash(self.workload)
+                key = (self.fabric, self.workload)
+            except TypeError:
+                key = None          # unhashable workload: rebuild each time
+        sched = _SCHED_CACHE.get(key) if key is not None else None
+        if sched is None:
+            sched = self.workload.build_schedule(topo)
+            if key is not None:
+                while len(_SCHED_CACHE) >= _SCHED_CACHE_MAX:
+                    _SCHED_CACHE.pop(next(iter(_SCHED_CACHE)))
+                _SCHED_CACHE[key] = sched
+        pol = (get_policy(self.policy) if isinstance(self.policy, str)
+               else self.policy)
+        return topo, sched, pol
+
+    def run(self, runner=None, cfg: EngineConfig | None = None) -> Results:
+        """Simulate this spec (convenience; prefer a shared SweepRunner)."""
+        from repro.core.sweep import SweepRunner
+        runner = runner or SweepRunner(cfg)
+        return runner.run_spec(self, cfg=cfg)
+
+
+def scenario_matrix(fabrics, workloads, policies,
+                    fabric_params=None) -> list[ScenarioSpec]:
+    """Cross-product helper: the paper's per-figure loops as one list."""
+    fabrics = [fabrics] if isinstance(fabrics, (FabricSpec, Topology)) \
+        else list(fabrics)
+    out = []
+    for fab in fabrics:
+        fname = (f"{fab.family}{fab.n_gpus}" if isinstance(fab, FabricSpec)
+                 else fab.name)
+        for wl in workloads:
+            for pol in policies:
+                pname = pol if isinstance(pol, str) else pol.name
+                wname = getattr(wl, "kind", type(wl).__name__)
+                out.append(ScenarioSpec(
+                    fabric=fab, workload=wl, policy=pol,
+                    fabric_params=fabric_params,
+                    name=f"{fname}_{wname}_{pname}"))
+    return out

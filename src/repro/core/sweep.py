@@ -1,18 +1,22 @@
 """Sweep-scale driving of the fluid engine: shape-bucketed compile reuse
-and vmap-batched CC-parameter sweeps.
+and vmap-batched CC-parameter x fabric-parameter sweeps.
 
-The paper's result set is a sweep (CC policies x collectives x topologies,
-Figs 3-11); the engine in ``repro.core.engine`` compiles one executable per
-``(policy logic, EngineConfig, static plan)``.  ``SweepRunner`` adds the
-two missing pieces for running *many* scenarios fast:
+The paper's result set is a sweep (CC policies x collectives x topologies
+x fabric tuning, Figs 3-11); the engine in ``repro.core.engine`` compiles
+one executable per ``(policy logic, EngineConfig, static plan)``.
+``SweepRunner`` adds the pieces for running *many* scenarios fast:
 
 * **shape buckets** — flow/group counts are padded up to the next power of
   two (inert padding, see ``engine._prep``), so schedules of similar size
   share one compiled executable instead of retracing per scenario;
-* **vmap batching** — ``run_batch`` stacks CC parameter pytrees of one
-  policy family on a leading axis and runs the whole population in a
-  single compiled call (``jax.vmap`` over the stepping loop), which turns
-  grid sweeps and population-based autotuning into one dispatch.
+* **vmap batching** — ``run_batch`` stacks CC parameter pytrees *and*
+  ``FabricParams`` leaves (ECN kmin/kmax/pmax, PFC xoff/xon) of one policy
+  family on a leading axis and runs the whole population in a single
+  compiled call, which turns joint CC x fabric grids and population-based
+  autotuning into one dispatch — zero recompiles after warmup;
+* **scenario specs** — ``run_spec`` / ``run_specs`` / ``grid_spec`` accept
+  the declarative ``repro.core.scenario.ScenarioSpec``, so drivers list
+  scenarios instead of hand-assembling topology + schedule + policy.
 
 Batched runs never record the per-device queue timeline (it is a
 per-member ``(T, D)`` buffer); use a plain ``run`` for Fig 5-7 style plots.
@@ -29,8 +33,9 @@ batch dimension vectorizes fully.
     runner = SweepRunner(EngineConfig(dt=2e-6, max_steps=4000, queue_stride=0))
     results = runner.run_policies(topo, sched, ["pfc", "dcqcn", "hpcc"])
     batch = runner.grid(topo, sched, get_policy("dcqcn"),
-                        {"rai_frac": [0.01, 0.03, 0.1],
-                         "timer": [25e-6, 55e-6, 105e-6]})
+                        {"rai_frac": [0.01, 0.03, 0.1]},
+                        fabric_grid={"kmin": [100e3, 400e3],
+                                     "xoff": [0.5e6, 1e6, 2e6]})
 """
 from __future__ import annotations
 
@@ -42,7 +47,8 @@ import numpy as np
 
 from repro.core import cc as cc_mod
 from repro.core.cc import Policy
-from repro.core.engine import (EngineConfig, Results, Simulator, _init_carry,
+from repro.core.engine import (EngineConfig, FabricParams, Results, Simulator,
+                               _as_fabric, _cfg_static, _init_carry,
                                _make_run, _next_pow2, _policy_cache_key)
 
 
@@ -52,9 +58,10 @@ def _bucket(n: int, lo: int = 32) -> int:
 
 @dataclasses.dataclass
 class BatchResults:
-    """One vmapped sweep over B stacked CC parameter sets."""
+    """One vmapped sweep over B stacked (CC params, FabricParams) sets."""
     policy: str
-    params: dict                  # stacked leaves, shape (B,)
+    params: dict                  # stacked CC leaves, shape (B,)
+    fabric: dict                  # stacked FabricParams leaves, (B,) or (B,C)
     completion_time: np.ndarray   # (B,)
     t_finish: np.ndarray          # (B, F)
     pause_count: np.ndarray       # (B, D)
@@ -77,36 +84,77 @@ class BatchResults:
     def param_set(self, i: int) -> dict:
         return {k: float(np.asarray(v)[i]) for k, v in self.params.items()}
 
+    def fabric_set(self, i: int) -> FabricParams:
+        return FabricParams(**{k: np.asarray(v)[i]
+                               for k, v in self.fabric.items()})
+
 
 _BATCH_CACHE: dict = {}
 
 
 def _compiled_batch(policy: Policy, cfg: EngineConfig, plan):
-    """vmapped (pp, stacked_params) -> stacked finals, cached like
-    ``engine.compiled_run`` so same-shaped scenarios share the executable."""
-    key = (_policy_cache_key(policy), cfg, plan)
+    """vmapped (pp, stacked_params, stacked_fabric) -> stacked finals,
+    cached like ``engine.compiled_run`` so same-shaped scenarios share the
+    executable (fabric scalars on cfg are normalized out of the key)."""
+    key = (_policy_cache_key(policy), _cfg_static(cfg), plan)
     if key not in _BATCH_CACHE:
         run = _make_run(policy, cfg, plan, early_exit=True)
 
-        def one(pp, params):
+        def one(pp, params, fab):
             carry = _init_carry(pp, plan, policy, cfg)
-            carry, steps = run(carry, pp, params)
+            carry, steps = run(carry, pp, params, fab)
             return {"t_finish": carry["t_finish"], "done": carry["done"],
                     "pause_count": carry["pause_count"],
                     "delivered": carry["delivered"], "soft": carry["soft"],
                     "steps": steps}
 
-        _BATCH_CACHE[key] = jax.jit(jax.vmap(one, in_axes=(None, 0)))
+        _BATCH_CACHE[key] = jax.jit(jax.vmap(one, in_axes=(None, 0, 0)))
     return _BATCH_CACHE[key]
+
+
+def compile_stats() -> dict:
+    """Compile-cache counters (for asserting zero-recompile sweeps)."""
+    from repro.core import engine as engine_mod
+
+    def n_exec(fns):
+        return sum(f._cache_size() for f in fns
+                   if hasattr(f, "_cache_size"))
+
+    return {
+        "run_cache": len(engine_mod._RUN_CACHE),
+        "batch_cache": len(_BATCH_CACHE),
+        "compiled_executables": n_exec(engine_mod._RUN_CACHE.values())
+        + n_exec(_BATCH_CACHE.values()),
+    }
+
+
+def _stack_fabric(base: FabricParams, stacked: dict | None, B: int) -> FabricParams:
+    """Stack FabricParams leaves on a leading B axis; leaves absent from
+    ``stacked`` broadcast the base value.  Stacked leaves may be (B,)
+    scalars-per-member or (B, N_LINK_CLASSES) per-class arrays."""
+    stacked = stacked or {}
+    FabricParams.check_fields(stacked)
+    leaves = {}
+    for f in FabricParams.FIELDS:
+        if f in stacked:
+            v = np.asarray(stacked[f], np.float32)
+            if v.shape[0] != B:
+                raise ValueError(f"fabric param {f!r} has leading dim "
+                                 f"{v.shape[0]}, expected batch {B}")
+        else:
+            b = np.asarray(getattr(base, f), np.float32)
+            v = np.broadcast_to(b, (B,) + b.shape)
+        leaves[f] = v
+    return FabricParams(**leaves)
 
 
 class SweepRunner:
     """Compile-once, run-many driver for ``repro.core.engine``.
 
-    One instance caches prepared scenarios (``_prep`` output) by object
-    identity and leans on the engine's global compile cache for the jitted
-    stepping loops, so sweeping P policies over S same-shaped scenarios
-    compiles each policy once, not P x S times.
+    One instance caches prepared scenarios (``_prep`` output) by content
+    fingerprint and leans on the engine's global compile cache for the
+    jitted stepping loops, so sweeping P policies over S same-shaped
+    scenarios compiles each policy once, not P x S times.
     """
 
     # prepared-scenario cache bound: entries hold (Fp, MAXHOP)-scale arrays,
@@ -126,7 +174,7 @@ class SweepRunner:
         h = hashlib.sha1()
         for a in (sched.path, sched.size, sched.group, sched.dep,
                   sched.delay, topo.cap, topo.lat, topo.src_dev,
-                  topo.dst_dev, topo.ecn_on, topo.fabric,
+                  topo.dst_dev, topo.ecn_on, topo.fabric, topo.link_class,
                   topo.dev_is_switch, topo.dev_buf):
             h.update(np.ascontiguousarray(a).tobytes())
         return (topo.name, sched.n_flows, sched.n_groups, h.hexdigest())
@@ -135,7 +183,9 @@ class SweepRunner:
     def simulator(self, topo, sched, policy: Policy,
                   cfg: EngineConfig | None = None) -> Simulator:
         cfg = cfg or self.cfg
-        key = (self._scenario_key(topo, sched), cfg,
+        # fabric scalars are traced (passed per run), so configs differing
+        # only there share one prepared Simulator
+        key = (self._scenario_key(topo, sched), _cfg_static(cfg),
                _policy_cache_key(policy))
         sim = self._sims.get(key)
         if sim is None:
@@ -151,43 +201,96 @@ class SweepRunner:
     # -- single runs ---------------------------------------------------------
     def run(self, topo, sched, policy: Policy | str,
             cc_params: dict | None = None,
-            cfg: EngineConfig | None = None) -> Results:
+            cfg: EngineConfig | None = None,
+            fabric_params: FabricParams | None = None) -> Results:
         policy = cc_mod.get_policy(policy) if isinstance(policy, str) else policy
-        return self.simulator(topo, sched, policy, cfg).run(cc_params)
+        cfg = cfg or self.cfg
+        # resolve the fabric from the *caller's* cfg: the cached Simulator
+        # may have been built under a different default
+        fab = _as_fabric(fabric_params, cfg)
+        return self.simulator(topo, sched, policy, cfg).run(
+            cc_params, fabric_params=fab)
 
     def run_policies(self, topo, sched, policies=None,
-                     cfg: EngineConfig | None = None) -> list[Results]:
+                     cfg: EngineConfig | None = None,
+                     fabric_params: FabricParams | None = None) -> list[Results]:
         """One scenario under each CC policy (the paper's per-figure loop)."""
         out = []
         for p in (policies or cc_mod.ALL_POLICIES):
-            out.append(self.run(topo, sched, p, cfg=cfg))
+            out.append(self.run(topo, sched, p, cfg=cfg,
+                                fabric_params=fabric_params))
         return out
+
+    # -- declarative scenarios ----------------------------------------------
+    def run_spec(self, spec, cfg: EngineConfig | None = None) -> Results:
+        """Simulate one ``ScenarioSpec`` (shape-bucketed + compile-cached)."""
+        topo, sched, policy = spec.build()
+        cc = None
+        if spec.cc_params:
+            policy.check_tunable(spec.cc_params)
+            cc = dict(policy.params, **spec.cc_params)
+        return self.run(topo, sched, policy, cc_params=cc, cfg=cfg,
+                        fabric_params=spec.fabric_params)
+
+    def run_specs(self, specs, cfg: EngineConfig | None = None) -> list[Results]:
+        """Simulate a list of ``ScenarioSpec``s; same-shaped specs share
+        compiled engines via the shape-bucketed scenario cache."""
+        return [self.run_spec(s, cfg=cfg) for s in specs]
+
+    def grid_spec(self, spec, param_grid: dict | None = None,
+                  fabric_grid: dict | None = None,
+                  cfg: EngineConfig | None = None) -> BatchResults:
+        """Full-factorial CC x fabric grid on one ``ScenarioSpec``."""
+        topo, sched, policy = spec.build()
+        return self.grid(topo, sched, policy, param_grid, fabric_grid,
+                         fabric_params=spec.fabric_params,
+                         cc_params=spec.cc_params, cfg=cfg)
 
     # -- batched parameter sweeps -------------------------------------------
     def run_batch(self, topo, sched, policy: Policy | str,
-                  stacked_params: dict) -> BatchResults:
-        """Simulate B parameter sets of one policy family in one call.
+                  stacked_params: dict | None = None,
+                  stacked_fabric: dict | None = None,
+                  fabric_params: FabricParams | None = None,
+                  cc_params: dict | None = None,
+                  cfg: EngineConfig | None = None) -> BatchResults:
+        """Simulate B (CC params, FabricParams) sets in one vmapped call.
 
-        ``stacked_params`` maps param name -> length-B array; missing params
-        are broadcast from the policy defaults.  Queue timelines are never
-        recorded for batched runs (per-member buffers).
+        ``stacked_params`` maps CC param name -> length-B array;
+        ``stacked_fabric`` maps FabricParams field -> (B,) or (B, C) array.
+        Missing CC params broadcast from the policy defaults (overridden by
+        ``cc_params``); missing fabric fields broadcast from
+        ``fabric_params`` (default: the runner config's scalars).  Queue
+        timelines are never recorded for batched runs (per-member buffers).
         """
         policy = cc_mod.get_policy(policy) if isinstance(policy, str) else policy
+        stacked_params = stacked_params or {}
         policy.check_tunable(stacked_params)
-        B = len(np.asarray(next(iter(stacked_params.values()))))
+        if cc_params:
+            policy.check_tunable(cc_params)
+        sizes = [len(np.asarray(v)) for v in stacked_params.values()]
+        sizes += [np.asarray(v).shape[0] for v in (stacked_fabric or {}).values()]
+        if not sizes:
+            raise ValueError("empty batch: provide stacked_params and/or "
+                             "stacked_fabric")
+        if len(set(sizes)) > 1:
+            raise ValueError(f"inconsistent batch sizes {sorted(set(sizes))}")
+        B = sizes[0]
+        base_cc = dict(policy.params, **(cc_params or {}))
         full = {k: np.asarray(stacked_params.get(k, np.full(B, float(v))),
                               np.float32)
-                for k, v in policy.params.items()}
-        cfg = dataclasses.replace(self.cfg, queue_stride=0)
+                for k, v in base_cc.items()}
+        cfg = dataclasses.replace(cfg or self.cfg, queue_stride=0)
+        fab = _stack_fabric(_as_fabric(fabric_params, cfg), stacked_fabric, B)
         sim = self.simulator(topo, sched, policy, cfg)
-        out = _compiled_batch(policy, cfg, sim.plan)(sim.pp, full)
-        F, G = sim.plan.n_flows, sim.plan.n_groups
-        del G
+        out = _compiled_batch(policy, cfg, sim.plan)(sim.pp, full, fab)
+        F = sim.plan.n_flows
         t_fin = np.asarray(out["t_finish"])[:, :F]
         done = np.asarray(out["done"])[:, :F]
         ct = np.max(np.where(np.isfinite(t_fin), t_fin, 0.0), axis=1)
         return BatchResults(
             policy=policy.name, params=full,
+            fabric={k: np.asarray(getattr(fab, k))
+                    for k in FabricParams.FIELDS},
             completion_time=ct, t_finish=t_fin,
             pause_count=np.asarray(out["pause_count"]),
             delivered=np.asarray(out["delivered"])[:, :F],
@@ -196,10 +299,37 @@ class SweepRunner:
         )
 
     def grid(self, topo, sched, policy: Policy | str,
-             param_grid: dict) -> BatchResults:
-        """Full-factorial sweep: {param: [values...]} -> one batched run."""
-        keys = list(param_grid)
-        mesh = np.meshgrid(*[np.asarray(param_grid[k], np.float32)
-                             for k in keys], indexing="ij")
-        return self.run_batch(topo, sched, policy,
-                              {k: m.reshape(-1) for k, m in zip(keys, mesh)})
+             param_grid: dict | None = None,
+             fabric_grid: dict | None = None,
+             fabric_params: FabricParams | None = None,
+             cc_params: dict | None = None,
+             cfg: EngineConfig | None = None) -> BatchResults:
+        """Full-factorial joint sweep: CC ``{param: [values...]}`` x fabric
+        ``{field: [values...]}`` -> ONE vmapped batched run.
+
+        Fabric grid axes may list scalars or per-class arrays (each entry
+        one grid point).  With both grids given, the batch enumerates the
+        full cross product — e.g. 3 kmin x 3 xoff x 4 CC points = B=36 in
+        a single compiled dispatch.
+        """
+        param_grid = param_grid or {}
+        fabric_grid = fabric_grid or {}
+        overlap = set(param_grid) & set(fabric_grid)
+        if overlap:
+            raise ValueError(f"params {sorted(overlap)} appear in both the "
+                             "CC and fabric grids")
+        axes = [np.asarray(v, np.float32)
+                for v in list(param_grid.values()) + list(fabric_grid.values())]
+        if not axes:
+            raise ValueError("empty grid")
+        # index-space meshgrid so per-class (point, C)-shaped fabric axes
+        # enumerate points along axis 0
+        idx = np.meshgrid(*[np.arange(len(a)) for a in axes], indexing="ij")
+        flat = [i.reshape(-1) for i in idx]
+        names = list(param_grid) + list(fabric_grid)
+        stacked = {k: axes[j][flat[j]] for j, k in enumerate(names)}
+        return self.run_batch(
+            topo, sched, policy,
+            {k: stacked[k] for k in param_grid},
+            stacked_fabric={k: stacked[k] for k in fabric_grid},
+            fabric_params=fabric_params, cc_params=cc_params, cfg=cfg)

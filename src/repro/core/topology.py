@@ -22,6 +22,14 @@ NVLINK_BW = 200 * 1e9         # 200 GBps (total, scale-up)
 NVLINK_LAT = 25e-9
 SWITCH_BUF = 32 * MB
 
+# Canonical fabric-link classes.  Every directed link belongs to exactly
+# one class; ``FabricParams`` (engine layer) may carry per-class arrays of
+# ECN/PFC knobs indexed by these ids, so tuning e.g. spine-downlink ECN
+# separately from ToR downlinks is one array entry, not a new topology.
+LINK_CLASSES = ("nvlink", "host_nic", "tor_down", "tor_up", "spine_down")
+N_LINK_CLASSES = len(LINK_CLASSES)
+LINK_CLASS_ID = {n: i for i, n in enumerate(LINK_CLASSES)}
+
 
 @dataclasses.dataclass
 class Topology:
@@ -34,6 +42,7 @@ class Topology:
     dst_dev: np.ndarray        # device whose ingress port this link feeds
     ecn_on: np.ndarray         # bool: switch egress queues mark ECN
     fabric: np.ndarray         # bool: RoCE fabric link (PFC-capable port)
+    link_class: np.ndarray     # int32 index into LINK_CLASSES
     # devices
     dev_is_switch: np.ndarray  # bool (PFC domain + metric group)
     dev_buf: np.ndarray        # bytes (PFC threshold base)
@@ -56,6 +65,7 @@ class _Builder:
         self.name = name
         self.cap, self.lat, self.src, self.dst, self.ecn = [], [], [], [], []
         self.fabric = []
+        self.link_class = []
         self.dev_is_switch, self.dev_buf, self.dev_name = [], [], []
 
     def add_dev(self, name, is_switch, buf=SWITCH_BUF) -> int:
@@ -64,13 +74,15 @@ class _Builder:
         self.dev_buf.append(buf if is_switch else 1e18)
         return len(self.dev_name) - 1
 
-    def add_link(self, u, v, cap, lat, ecn, fabric=True) -> int:
+    def add_link(self, u, v, cap, lat, ecn, fabric=True,
+                 cls="host_nic") -> int:
         self.cap.append(cap)
         self.lat.append(lat)
         self.src.append(u)
         self.dst.append(v)
         self.ecn.append(ecn)
         self.fabric.append(fabric)
+        self.link_class.append(LINK_CLASS_ID[cls])
         return len(self.cap) - 1
 
     def build(self, n_gpus, up_link, meta) -> Topology:
@@ -83,6 +95,7 @@ class _Builder:
             dst_dev=np.asarray(self.dst, np.int32),
             ecn_on=np.asarray(self.ecn, bool),
             fabric=np.asarray(self.fabric, bool),
+            link_class=np.asarray(self.link_class, np.int32),
             dev_is_switch=np.asarray(self.dev_is_switch, bool),
             dev_buf=np.asarray(self.dev_buf, np.float64),
             dev_name=self.dev_name,
@@ -103,7 +116,8 @@ def single_switch(n_gpus: int = 8, bw: float = NIC_BW, lat: float = NIC_LAT,
     for g in range(n_gpus):
         up.append(b.add_link(g, sw, bw, lat, ecn=False))   # host NIC egress
     for g in range(n_gpus):
-        down.append(b.add_link(sw, g, bw, lat, ecn=True))  # switch egress
+        down.append(b.add_link(sw, g, bw, lat, ecn=True,
+                               cls="tor_down"))            # switch egress
     meta = {"down_link": np.asarray(down, np.int32), "kind": "single",
             "switches": [sw]}
     return b.build(n_gpus, up, meta)
@@ -131,17 +145,22 @@ def clos(n_racks: int = 8, nodes_per_rack: int = 2, gpus_per_node: int = 8,
         node = g // gpus_per_node
         rack = node // nodes_per_rack
         # scale-up (proprietary lossless fabric: credit-based, not PFC)
-        nv_up[g] = b.add_link(g, nvsw[node], nv_bw, nv_lat, ecn=False, fabric=False)
-        nv_down[g] = b.add_link(nvsw[node], g, nv_bw, nv_lat, ecn=False, fabric=False)
+        nv_up[g] = b.add_link(g, nvsw[node], nv_bw, nv_lat, ecn=False,
+                              fabric=False, cls="nvlink")
+        nv_down[g] = b.add_link(nvsw[node], g, nv_bw, nv_lat, ecn=False,
+                                fabric=False, cls="nvlink")
         # scale-out
         up[g] = b.add_link(g, tors[rack], nic_bw, nic_lat, ecn=False)
-        tor_down[g] = b.add_link(tors[rack], g, nic_bw, nic_lat, ecn=True)
+        tor_down[g] = b.add_link(tors[rack], g, nic_bw, nic_lat, ecn=True,
+                                 cls="tor_down")
     tor_up = np.zeros((n_racks, n_spines), np.int32)
     spine_down = np.zeros((n_spines, n_racks), np.int32)
     for r in range(n_racks):
         for s in range(n_spines):
-            tor_up[r, s] = b.add_link(tors[r], spines[s], nic_bw, nic_lat, ecn=True)
-            spine_down[s, r] = b.add_link(spines[s], tors[r], nic_bw, nic_lat, ecn=True)
+            tor_up[r, s] = b.add_link(tors[r], spines[s], nic_bw, nic_lat,
+                                      ecn=True, cls="tor_up")
+            spine_down[s, r] = b.add_link(spines[s], tors[r], nic_bw, nic_lat,
+                                          ecn=True, cls="spine_down")
 
     meta = {
         "kind": "clos",

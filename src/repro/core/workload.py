@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.core.collectives import Schedule, ScheduleBuilder, _direct_phase
 from repro.core.engine import EngineConfig, Results, simulate
+from repro.core.scenario import ScenarioSpec
 from repro.core.topology import Topology
 
 
@@ -144,6 +145,20 @@ def _add_ar2d(b, topo, gpus, total, n_chunks, dep):
     return last
 
 
+@dataclasses.dataclass(frozen=True)
+class DLRMIterationSpec:
+    """Scenario workload: one DLRM training iteration (compute markers +
+    A2A halves + per-chunk gradient All-Reduce)."""
+    prof: DLRMComputeProfile = DLRMComputeProfile()
+    comm: DLRMCommSpec = DLRMCommSpec()
+    gpus: tuple | None = None      # None -> every fabric GPU
+
+    def build_schedule(self, topo: Topology) -> Schedule:
+        gpus = (list(self.gpus) if self.gpus is not None
+                else list(range(topo.n_gpus)))
+        return build_dlrm_iteration(topo, gpus, self.prof, self.comm)
+
+
 @dataclasses.dataclass
 class IterationReport:
     iteration_time: float
@@ -161,10 +176,12 @@ def simulate_dlrm_iteration(topo: Topology, gpus: list, policy,
                             runner=None) -> IterationReport:
     """Pass a ``repro.core.sweep.SweepRunner`` to reuse compiled engines
     across the per-policy / per-algo loops of Figs 10-11."""
-    sched = build_dlrm_iteration(topo, gpus, prof, comm)
+    spec = ScenarioSpec(fabric=topo, policy=policy,
+                        workload=DLRMIterationSpec(prof, comm, tuple(gpus)))
     if runner is not None:
-        res = runner.run(topo, sched, policy, cfg=cfg)
+        res = runner.run_spec(spec, cfg=cfg)
     else:
+        topo, sched, policy = spec.build()
         res = simulate(topo, sched, policy, cfg)
     # iteration ends when every flow (incl. compute markers) is done, plus
     # the optimizer update after the last gradient arrives

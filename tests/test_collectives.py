@@ -3,9 +3,12 @@ import numpy as np
 import pytest
 from _hyp import given, settings, st
 
-from repro.core.collectives import (allreduce_1d, allreduce_2d, alltoall,
-                                    collective_bytes_on_nics)
-from repro.core.topology import clos, single_switch
+from repro.core.collectives import (COLLECTIVES, ScheduleBuilder,
+                                    allreduce_1d, allreduce_2d,
+                                    allreduce_hring, allreduce_ring,
+                                    alltoall, collective_bytes_on_nics,
+                                    get_collective)
+from repro.core.topology import _ecmp_hash, clos, route, single_switch
 
 
 @pytest.fixture(scope="module")
@@ -83,3 +86,102 @@ def test_ecmp_spreads_spine_choice():
     assert len(used) == len(spine_links)
     counts = np.asarray(list(used.values()))
     assert counts.max() / max(counts.min(), 1) < 4
+
+
+def test_ecmp_hash_buckets_chi_square():
+    """_ecmp_hash over ScheduleBuilder-style keys must spread uniformly:
+    a (loose) chi-square bound on the spine buckets."""
+    k = 8
+    n = 4000
+    counts = np.zeros(k)
+    for src in range(50):
+        for dst in range(80):
+            key = (src * 131071 + dst * 8191 + src * 524287) & 0x7FFFFFFF
+            counts[_ecmp_hash(key) % k] += 1
+    assert counts.sum() == n
+    exp = n / k
+    chi2 = float(((counts - exp) ** 2 / exp).sum())
+    # dof = 7; a uniform hash lands ~7 with fluctuation — 3x the bucket
+    # count is a deliberately loose bound that still catches a broken mix
+    assert chi2 < 3 * k, (chi2, counts.tolist())
+    assert (counts > 0).all()
+
+
+def test_route_uses_every_spine_for_cross_rack():
+    topo = clos(n_racks=2, nodes_per_rack=2, gpus_per_node=4, n_spines=8)
+    spine_links = set(topo.meta["tor_up"].flatten().tolist())
+    hit = set()
+    for src in range(8):               # rack 0
+        for dst in range(8, 16):       # rack 1
+            for salt in range(4):
+                key = (src * 131071 + dst * 8191 + salt * 524287) & 0x7FFFFFFF
+                for l in route(topo, src, dst, key):
+                    if l in spine_links:
+                        hit.add(l)
+    # rack-0 ToR has 8 uplinks; cross-rack flows must reach all of them
+    assert len(hit) == 8
+
+
+@pytest.mark.parametrize("name", sorted({f.__name__ for f in COLLECTIVES.values()}))
+def test_registered_collectives_conserve_bytes(name):
+    """Every registered collective must deliver exactly the bytes it
+    schedules (engine byte conservation end-to-end)."""
+    from repro.core.cc import get_policy
+    from repro.core.engine import EngineConfig, simulate
+    topo = clos(n_racks=1, nodes_per_rack=2, gpus_per_node=4)
+    sched = get_collective(name)(topo, list(range(8)), 2e6, n_chunks=2)
+    assert sched.total_bytes() > 0
+    cfg = EngineConfig(dt=1e-6, max_steps=2500, max_extends=3, queue_stride=0)
+    r = simulate(topo, sched, get_policy("pfc"), cfg)
+    assert r.finished, name
+    np.testing.assert_allclose(r.delivered.sum(), sched.size.sum(), rtol=2e-3)
+
+
+def test_ring_nic_bytes_at_most_1d(topo):
+    """Topology-aware ring keeps NIC traffic <= the direct 1D algorithm
+    (same total bytes, neighbor hops mostly on the scale-up fabric)."""
+    gpus = list(range(16))
+    S = 64e6
+    ring = allreduce_ring(topo, gpus, S)
+    d1 = allreduce_1d(topo, gpus, S)
+    np.testing.assert_allclose(ring.total_bytes(), d1.total_bytes(), rtol=1e-6)
+    assert collective_bytes_on_nics(ring, topo) <= \
+        collective_bytes_on_nics(d1, topo)
+    # hierarchical ring matches 2D's NIC traffic profile
+    hring = allreduce_hring(topo, gpus, S)
+    d2 = allreduce_2d(topo, gpus, S)
+    np.testing.assert_allclose(collective_bytes_on_nics(hring, topo),
+                               collective_bytes_on_nics(d2, topo), rtol=1e-6)
+
+
+def test_ring_step_chain(topo):
+    """Ring RS/AG steps serialize: step s depends on step s-1."""
+    sched = allreduce_ring(topo, list(range(8)), 8e6, n_chunks=2)
+    # 2 chunks x (7 RS + 7 AG) step-groups
+    assert sched.n_groups == 2 * 14
+    deps = {}
+    for f in range(sched.n_flows):
+        deps.setdefault(int(sched.group[f]), set()).add(int(sched.dep[f]))
+    for g, d in deps.items():
+        assert len(d) == 1
+        assert next(iter(d)) < g or next(iter(d)) == -1
+
+
+def test_builder_rejects_bad_deps():
+    topo = single_switch(4)
+    b = ScheduleBuilder(topo)
+    g0 = b.new_group("first")
+    b.add_flow(0, 1, 1e6, g0, dep=g0)      # self-dependency
+    with pytest.raises(ValueError, match="its own group"):
+        b.build()
+    b = ScheduleBuilder(topo)
+    g0 = b.new_group("early")
+    g1 = b.new_group("late")
+    b.add_flow(0, 1, 1e6, g0, dep=g1)      # forward reference
+    with pytest.raises(ValueError, match="'late'"):
+        b.build()
+    b = ScheduleBuilder(topo)
+    g0 = b.new_group("only")
+    b.add_flow(0, 1, 1e6, g0, dep=7)       # dangling group id
+    with pytest.raises(ValueError, match="undefined group 7"):
+        b.build()

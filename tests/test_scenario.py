@@ -1,0 +1,273 @@
+"""Declarative scenario layer + dynamic FabricParams.
+
+Covers the PR acceptance gate: a fabric-parameter grid (3 kmin/kmax x 3
+xoff x 2 CC policies on the 32-GPU CLOS) runs through one
+``SweepRunner.grid`` call per policy with ZERO recompiles after warmup,
+and FabricParams defaults reproduce the seed-engine goldens.
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.cc import get_policy
+from repro.core.collectives import incast
+from repro.core.engine import EngineConfig, FabricParams, Simulator, simulate
+from repro.core.scenario import (TOPOLOGIES, CollectiveSpec, FabricSpec,
+                                 IncastSpec, ScenarioSpec, scenario_matrix)
+from repro.core.sweep import SweepRunner, compile_stats
+from repro.core.topology import (LINK_CLASSES, N_LINK_CLASSES, clos,
+                                 single_switch)
+
+GOLD = json.load(open(os.path.join(os.path.dirname(__file__), "golden",
+                                   "engine_seed.json")))
+
+
+# ---------------------------------------------------------------------------
+# FabricSpec / registries
+# ---------------------------------------------------------------------------
+
+def test_fabric_spec_builds_and_caches():
+    spec = FabricSpec(family="clos", n_racks=2, nodes_per_rack=2,
+                      gpus_per_node=8)
+    topo = spec.build()
+    assert topo.n_gpus == 32 == spec.n_gpus
+    # value-cached: an equal spec returns the same built object
+    assert FabricSpec(family="clos", n_racks=2, nodes_per_rack=2,
+                      gpus_per_node=8).build() is topo
+
+
+def test_fabric_spec_oversubscription():
+    full = FabricSpec(family="clos", nodes_per_rack=2, gpus_per_node=8)
+    assert full.spine_count == 16           # one uplink per NIC downlink
+    half = dataclasses.replace(full, oversubscription=2.0)
+    assert half.spine_count == 8
+    assert half.build().meta["n_spines"] == 8
+    explicit = dataclasses.replace(full, n_spines=3)
+    assert explicit.spine_count == 3
+
+
+def test_unknown_topology_family():
+    with pytest.raises(KeyError, match="unknown topology family"):
+        FabricSpec(family="dragonfly").build()
+    assert set(TOPOLOGIES) >= {"clos", "single"}
+
+
+def test_workload_specs_build_schedules():
+    topo = FabricSpec(family="single", n_racks=1, nodes_per_rack=1,
+                      gpus_per_node=8).build()
+    s = CollectiveSpec("a2a", 8e6, n_chunks=2).build_schedule(topo)
+    assert s.n_flows == 8 * 7 * 2
+    s = IncastSpec(n_senders=7, size_each=1e6).build_schedule(topo)
+    assert s.n_flows == 7
+    with pytest.raises(KeyError, match="unknown collective"):
+        CollectiveSpec("nope", 8e6).build_schedule(topo)
+
+
+def test_schedule_memoized_across_policies():
+    """A per-policy spec list over one (FabricSpec, workload) must build
+    the schedule once — build() returns the same object."""
+    fab = FabricSpec(family="single", n_racks=1, nodes_per_rack=1,
+                     gpus_per_node=8)
+    wl = CollectiveSpec("a2a", 4e6, n_chunks=2)
+    scheds = [ScenarioSpec(fab, wl, pol).build()[1]
+              for pol in ("pfc", "dcqcn", "hpcc")]
+    assert scheds[0] is scheds[1] is scheds[2]
+    # a prebuilt-Topology fabric is uncached (no value identity) but works
+    topo = fab.build()
+    s = ScenarioSpec(topo, wl, "pfc").build()[1]
+    assert s is not scheds[0]
+    np.testing.assert_array_equal(s.size, scheds[0].size)
+
+
+def test_scenario_matrix_names():
+    specs = scenario_matrix(
+        FabricSpec(family="clos", n_racks=1, nodes_per_rack=2, gpus_per_node=4),
+        [CollectiveSpec("ring", 4e6), CollectiveSpec("2d", 4e6)],
+        ["pfc", "dcqcn"])
+    assert len(specs) == 4
+    assert specs[0].name == "clos8_ring_pfc"
+    assert {s.policy for s in specs} == {"pfc", "dcqcn"}
+
+
+def test_spec_run_and_cc_param_validation():
+    spec = ScenarioSpec(
+        fabric=FabricSpec(family="single", n_racks=1, nodes_per_rack=1,
+                          gpus_per_node=4),
+        workload=IncastSpec(n_senders=3, size_each=1e6),
+        policy="dcqcn", cc_params={"rai_frac": 0.05})
+    cfg = EngineConfig(dt=1e-6, max_steps=600, max_extends=2, queue_stride=0)
+    r = SweepRunner(cfg).run_spec(spec)
+    assert r.finished
+    bad = dataclasses.replace(spec, cc_params={"not_a_param": 1.0})
+    with pytest.raises(ValueError, match="unknown"):
+        SweepRunner(cfg).run_spec(bad)
+
+
+# ---------------------------------------------------------------------------
+# FabricParams semantics
+# ---------------------------------------------------------------------------
+
+def test_fabric_defaults_reproduce_seed_goldens():
+    """Explicitly-passed default FabricParams must reproduce the seed
+    engine's golden results (the old static-scalar behavior)."""
+    topo = single_switch(8)
+    sched = incast(topo, list(range(1, 8)), 0, 10e6)
+    cfg = EngineConfig(dt=1e-6, max_steps=1500, max_extends=5)
+    for pol in ("pfc", "dcqcn", "dctcp"):
+        g = GOLD[f"incast_ss8/{pol}"]
+        r = simulate(topo, sched, get_policy(pol), cfg,
+                     fabric_params=FabricParams())
+        np.testing.assert_allclose(r.completion_time, g["completion_time"],
+                                   rtol=1e-5)
+        t_gold = np.array([np.inf if v is None else v for v in g["t_finish"]])
+        np.testing.assert_allclose(r.t_finish, t_gold, rtol=1e-5)
+        np.testing.assert_allclose(r.pause_count, np.asarray(g["pause_count"]),
+                                   rtol=1e-3, atol=1.0)
+
+
+def test_per_class_arrays_match_scalars_bitwise():
+    topo = single_switch(8)
+    sched = incast(topo, list(range(1, 8)), 0, 5e6)
+    cfg = EngineConfig(dt=1e-6, max_steps=1200, max_extends=2)
+    sim = Simulator(topo, sched, get_policy("dcqcn"), cfg)
+    r0 = sim.run()
+    uniform = FabricParams(**{
+        f: np.full(N_LINK_CLASSES,
+                   float(np.asarray(getattr(FabricParams(), f))), np.float32)
+        for f in FabricParams.FIELDS})
+    r1 = sim.run(fabric_params=uniform)
+    assert np.array_equal(r0.t_finish, r1.t_finish)
+    assert np.array_equal(r0.pause_count, r1.pause_count)
+    assert np.array_equal(r0.delivered, r1.delivered)
+
+
+def test_with_class_targets_one_link_class():
+    fab = FabricParams().with_class(xoff={"tor_down": 123.0})
+    xoff = np.asarray(fab.xoff)
+    assert xoff.shape == (N_LINK_CLASSES,)
+    i = LINK_CLASSES.index("tor_down")
+    assert xoff[i] == 123.0
+    others = np.delete(xoff, i)
+    assert (others == 1e6).all()
+    # scalar leaves untouched
+    assert np.asarray(fab.kmin).shape == ()
+
+
+def test_fabric_params_change_physics_without_recompile():
+    """Tight PFC thresholds must create pauses; and a fabric change must
+    not grow any compile cache (the knobs are traced inputs)."""
+    topo = single_switch(8)
+    sched = incast(topo, list(range(1, 8)), 0, 5e6)
+    cfg = EngineConfig(dt=1e-6, max_steps=1500, max_extends=2)
+    sim = Simulator(topo, sched, get_policy("pfc"), cfg)
+    base = sim.run()
+    s0 = compile_stats()
+    tight = sim.run(fabric_params=FabricParams(xoff=0.2e6, xon=0.15e6))
+    assert compile_stats() == s0
+    assert tight.pause_count.sum() > base.pause_count.sum()
+    # ECN ramp position moves DCQCN's completion
+    sim2 = Simulator(topo, sched, get_policy("dcqcn"), cfg)
+    r_early = sim2.run(fabric_params=FabricParams(kmin=20e3, kmax=80e3))
+    r_late = sim2.run(fabric_params=FabricParams(kmin=4e6, kmax=16e6))
+    assert r_early.completion_time != r_late.completion_time
+
+
+def test_soft_cost_differentiates_through_fabric():
+    import jax
+    topo = single_switch(8)
+    sched = incast(topo, list(range(1, 8)), 0, 3e6)
+    cfg = EngineConfig(dt=2e-6, max_steps=500, max_extends=0, queue_stride=0)
+    sim = Simulator(topo, sched, get_policy("dcqcn"), cfg)
+    cost = sim.soft_cost_fn()
+    g = jax.grad(lambda f: cost(get_policy("dcqcn").params, f))(FabricParams())
+    assert np.isfinite(np.asarray(g.kmin))
+    assert float(np.abs(np.asarray(g.kmin))) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# acceptance gate: joint fabric grid, zero recompiles after warmup
+# ---------------------------------------------------------------------------
+
+def test_fabric_grid_zero_recompiles_32gpu_clos():
+    """3 kmin/kmax x 3 xoff x 2 CC policies on the 32-GPU CLOS: one
+    ``grid`` call per policy, and after a same-shaped warmup the full
+    sweep adds ZERO compiled executables."""
+    fab = FabricSpec(family="clos", n_racks=2, nodes_per_rack=2,
+                     gpus_per_node=8)
+    assert fab.n_gpus == 32
+    spec_of = {pol: ScenarioSpec(fab, CollectiveSpec("1d", 4e6, n_chunks=2),
+                                 pol) for pol in ("dcqcn", "dctcp")}
+    runner = SweepRunner(EngineConfig(dt=2e-6, max_steps=1200, max_extends=1,
+                                      queue_stride=0))
+    grids = dict(kmin=[100e3, 400e3, 800e3],
+                 kmax=[400e3, 1600e3, 3200e3],
+                 xoff=[0.5e6, 1e6, 2e6])
+    warm_grids = {k: [v * 1.1 for v in vs] for k, vs in grids.items()}
+    for pol, spec in spec_of.items():      # warmup: same shapes, other values
+        runner.grid_spec(spec, fabric_grid=warm_grids)
+    s0 = compile_stats()
+    for pol, spec in spec_of.items():
+        batch = runner.grid_spec(spec, fabric_grid=grids)
+        assert batch.n == 27
+        assert batch.finished.all()
+        # every grid point is a distinct fabric
+        pts = set(zip(batch.fabric["kmin"].tolist(),
+                      batch.fabric["kmax"].tolist(),
+                      batch.fabric["xoff"].tolist()))
+        assert len(pts) == 27
+    assert compile_stats() == s0, "fabric grid recompiled after warmup"
+
+
+def test_grid_joint_cc_and_fabric_matches_serial():
+    topo = single_switch(8)
+    sched = incast(topo, list(range(1, 8)), 0, 2e6)
+    cfg = EngineConfig(dt=1e-6, max_steps=900, max_extends=1, queue_stride=0)
+    runner = SweepRunner(cfg)
+    batch = runner.grid(topo, sched, "dcqcn",
+                        {"rai_frac": [0.01, 0.05]},
+                        fabric_grid={"xoff": [0.3e6, 1e6]})
+    assert batch.n == 4
+    for i in range(batch.n):
+        serial = runner.run(topo, sched, get_policy("dcqcn"),
+                            cc_params=batch.param_set(i), cfg=cfg,
+                            fabric_params=batch.fabric_set(i))
+        np.testing.assert_allclose(batch.t_finish[i], serial.t_finish,
+                                   rtol=1e-5)
+        np.testing.assert_allclose(batch.pause_count[i], serial.pause_count,
+                                   rtol=1e-3, atol=1.0)
+
+
+def test_grid_input_validation():
+    topo = single_switch(4)
+    sched = incast(topo, [1, 2], 0, 1e6)
+    runner = SweepRunner(EngineConfig(dt=1e-6, max_steps=100, max_extends=0,
+                                      queue_stride=0))
+    with pytest.raises(ValueError, match="unknown fabric params"):
+        runner.run_batch(topo, sched, "dcqcn",
+                         stacked_fabric={"koff": np.array([1.0, 2.0])})
+    with pytest.raises(ValueError, match="inconsistent batch"):
+        runner.run_batch(topo, sched, "dcqcn",
+                         {"rai_frac": np.array([0.01, 0.02])},
+                         stacked_fabric={"xoff": np.array([1e6, 2e6, 3e6])})
+    with pytest.raises(ValueError, match="empty"):
+        runner.grid(topo, sched, "dcqcn", {})
+
+
+def test_autotune_fabric_keys():
+    from repro.core.autotune import autotune_spec
+    spec = ScenarioSpec(
+        fabric=FabricSpec(family="single", n_racks=1, nodes_per_rack=1,
+                          gpus_per_node=5),
+        workload=IncastSpec(n_senders=4, size_each=2e6),
+        policy=get_policy("dcqcn"))
+    cfg = EngineConfig(dt=2e-6, max_steps=400, max_extends=0, queue_stride=0)
+    res = autotune_spec(spec, [], fabric_keys=["kmin"], steps=2,
+                        cfg=cfg, population=2)
+    assert res.fabric is not None
+    assert float(np.asarray(res.fabric.kmin)) > 0
+    assert len(res.history) == 2
+    with pytest.raises(ValueError, match="unknown fabric params"):
+        autotune_spec(spec, [], fabric_keys=["nope"], steps=1, cfg=cfg)
