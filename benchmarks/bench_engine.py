@@ -125,6 +125,75 @@ def bench_sweep(B: int = 8) -> dict:
     }
 
 
+def bench_policy_axis(policies=("pfc", "dcqcn", "dctcp", "timely", "hpcc")) -> dict:
+    """The paper's policy-comparison loop on the 32-GPU CLOS All-Reduce:
+    vmapped ``run_policy_axis`` (one stacked dispatch over B policies) vs
+    serial ``run_policies`` (B compiled runs, each early-exiting).  The
+    batched path integrates until the *slowest* member finishes, so the
+    speedup is the dispatch/vectorization win net of that cost — on CPU
+    it wins in the dispatch-bound regime (the ``small_scenario``
+    sub-benchmark; cf. ``SweepRunner.batch_pays_off``) and loses on the
+    gather-bound 7936-flow headline, where drivers auto-fall back to
+    serial.  Accelerator backends vectorize the batch axis fully.
+    """
+    topo, sched, cfg = headline_case()
+    runner = SweepRunner(cfg)
+    B = len(policies)
+    t0 = time.time()
+    batch = runner.run_policy_axis(topo, sched, policies)
+    cold = time.time() - t0
+    t0 = time.time()
+    batch = runner.run_policy_axis(topo, sched, policies)
+    warm = time.time() - t0
+    runner.run_policies(topo, sched, policies)          # warm the serial path
+    t0 = time.time()
+    serial = runner.run_policies(topo, sched, policies)
+    serial_s = time.time() - t0
+    import numpy as np
+    agree = all(
+        np.allclose(batch.completion_time[i], serial[i].completion_time,
+                    rtol=1e-5)
+        for i in range(B))
+    # the dispatch-bound regime (8-GPU CLOS All-Reduce, the autotune/grid
+    # scenario size): where the vmapped policy axis pays off on CPU
+    from repro.core.topology import clos as _clos
+    topo_s = _clos(n_racks=1, nodes_per_rack=2, gpus_per_node=4)
+    sched_s = allreduce_1d(topo_s, list(range(8)), 8e6)
+    cfg_s = EngineConfig(dt=1e-6, max_steps=2500, max_extends=0,
+                         queue_stride=0)
+    runner_s = SweepRunner(cfg_s)
+    runner_s.run_policy_axis(topo_s, sched_s, policies)       # warmup
+    t0 = time.time()
+    small = runner_s.run_policy_axis(topo_s, sched_s, policies)
+    small_warm = time.time() - t0
+    runner_s.run_policies(topo_s, sched_s, policies)          # warmup
+    t0 = time.time()
+    runner_s.run_policies(topo_s, sched_s, policies)
+    small_serial = time.time() - t0
+    return {
+        "scenario": "clos32_ar1d policy axis "
+                    "(dt=2e-6 max_steps=4000 max_extends=6)",
+        "policies": list(policies),
+        "batch": B,
+        "cold_s": round(cold, 3),
+        "warm_s": round(warm, 3),
+        "warm_s_per_policy": round(warm / B, 4),
+        "serial_s": round(serial_s, 3),
+        "vmap_speedup_vs_serial": round(serial_s / warm, 2),
+        "all_finished": bool(batch.finished.all()),
+        "matches_serial": agree,
+        "policy_axis_pays_off_here": SweepRunner(cfg).policy_axis_pays_off(),
+        "small_scenario": {
+            "scenario": "clos8_ar1d policy axis (dispatch-bound regime)",
+            "n_flows": sched_s.n_flows,
+            "warm_s": round(small_warm, 3),
+            "serial_s": round(small_serial, 3),
+            "vmap_speedup_vs_serial": round(small_serial / small_warm, 2),
+            "all_finished": bool(small.finished.all()),
+        },
+    }
+
+
 def bench_figures() -> dict:
     """Warm wall time of small-scale versions of the figure scenarios."""
     out = {}
@@ -179,6 +248,7 @@ def main():
         args.seed_warm_s / report["headline"]["warm_s"], 1)
     if not args.smoke:
         report["sweep_vmap"] = bench_sweep()
+        report["policy_axis"] = bench_policy_axis()
         report["figure_scenarios"] = bench_figures()
 
     with open(args.out, "w") as f:

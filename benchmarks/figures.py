@@ -8,14 +8,15 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (RUNNER, collective_size, downsample, emit,
+from benchmarks.common import (RUNNER, collective_size, downsample,
                                engine_cfg, paper_clos, paper_fabric,
                                run_cached, save_json, single_fabric)
 from repro.core.cc import ALL_POLICIES, get_policy
 from repro.core.engine import EngineConfig
 from repro.core.scenario import CollectiveSpec, IncastSpec, ScenarioSpec
 from repro.core.workload import (DLRMCommSpec, DLRMComputeProfile,
-                                 simulate_dlrm_iteration)
+                                 simulate_dlrm_iteration,
+                                 simulate_dlrm_policies)
 
 
 def fig3_incast():
@@ -130,17 +131,20 @@ def fig9_pfc_counts():
 
 
 def fig10_dlrm_e2e():
-    """Fig 10: DLRM iteration = compute + exposed comm, per CC x {1D,2D}."""
+    """Fig 10: DLRM iteration = compute + exposed comm, per CC x {1D,2D}.
+
+    The per-policy loop is one vmapped policy-axis dispatch per allreduce
+    algorithm (``simulate_dlrm_policies``)."""
     topo, n = paper_clos()
     cfg = engine_cfg(queue_stride=0)
     rows = []
     report = {}
     for algo in ("2d", "1d"):
-        for pol in ALL_POLICIES:
-            rep = simulate_dlrm_iteration(
-                topo, list(range(n)), get_policy(pol),
-                comm=DLRMCommSpec(allreduce_algo=algo), cfg=cfg,
-                runner=RUNNER)
+        reps = simulate_dlrm_policies(
+            topo, list(range(n)), ALL_POLICIES,
+            comm=DLRMCommSpec(allreduce_algo=algo), cfg=cfg, runner=RUNNER)
+        for rep in reps:
+            pol = rep.policy
             rows.append(("fig10", f"dlrm_{algo}_iter_ms", pol,
                          round(rep.iteration_time * 1e3, 4)))
             rows.append(("fig10", f"dlrm_{algo}_exposed_ms", pol,

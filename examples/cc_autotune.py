@@ -31,10 +31,13 @@ def main():
     # simulation per step; member 0 is the paper-default parameterisation
     res = autotune_spec(spec, ["rai_frac", "rhai_frac", "g"],
                         steps=10, lr=0.25, cfg=cfg, population=4)
-    print("history (soft cost = integral of undelivered fraction):")
+    print("history (soft cost = integral of undelivered fraction;")
+    print(" descent scale + bounds come from each param's declared ParamSpec):")
     for h in res.history:
-        print("  step %2d cost %.6f rai=%.4f rhai=%.4f g=%.5f"
-              % (h["step"], h["cost"], h["rai_frac"], h["rhai_frac"], h["g"]))
+        proj = f"  [clamped: {','.join(h['projected'])}]" if h["projected"] else ""
+        print("  step %2d cost %.6f rai=%.4f rhai=%.4f g=%.5f%s"
+              % (h["step"], h["cost"], h["rai_frac"], h["rhai_frac"],
+                 h["g"], proj))
     print(f"baseline {res.baseline_cost:.6f} -> tuned {res.tuned_cost:.6f}")
 
     run_cfg = EngineConfig(dt=1e-6, max_steps=2000, max_extends=5)

@@ -46,6 +46,13 @@ def netsim_demo():
         q = r.dev_queue[:, 8].max() / 1e6
         print(f"  {name:14s} {r.completion_time*1e3:8.3f} ms {q:12.2f} MB"
               f" {int(r.pause_count.sum()):10d}")
+    # the same comparison as ONE vmapped dispatch: a spec whose policy is a
+    # tuple declares a policy axis (cc.stack_policies under the hood)
+    topo, sched, _ = ScenarioSpec(fab, wl, ("pfc", "dcqcn", "timely")).build()
+    batch = runner.run_policy_axis(topo, sched, ("pfc", "dcqcn", "timely"))
+    print("  policy axis (one vmapped call):",
+          ", ".join(f"{batch.policy_of(i)}={batch.completion_time[i]*1e3:.3f}ms"
+                    for i in range(batch.n)))
 
 
 if __name__ == "__main__":

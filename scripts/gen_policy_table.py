@@ -1,0 +1,42 @@
+"""Regenerate the README's CC-policy table from the live registry.
+
+The table between the POLICY_TABLE markers in README.md is *generated*
+(``repro.core.cc.policy_table_markdown``), and
+``tests/test_policy_api.py::test_readme_policy_table_in_sync`` fails when
+the two drift — run this script after changing any ``ParamSpec``:
+
+    PYTHONPATH=src python scripts/gen_policy_table.py
+"""
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.cc import policy_table_markdown  # noqa: E402
+
+START = "<!-- POLICY_TABLE_START (generated; see scripts/gen_policy_table.py) -->"
+END = "<!-- POLICY_TABLE_END -->"
+
+
+def inject(readme_text: str) -> str:
+    block = f"{START}\n{policy_table_markdown()}\n{END}"
+    pattern = re.compile(re.escape(START) + ".*?" + re.escape(END), re.S)
+    if not pattern.search(readme_text):
+        raise SystemExit("README.md is missing the POLICY_TABLE markers")
+    return pattern.sub(block, readme_text)
+
+
+def main():
+    path = os.path.join(os.path.dirname(__file__), "..", "README.md")
+    with open(path) as f:
+        text = f.read()
+    new = inject(text)
+    with open(path, "w") as f:
+        f.write(new)
+    print("README.md policy table regenerated"
+          + (" (unchanged)" if new == text else ""))
+
+
+if __name__ == "__main__":
+    main()

@@ -6,7 +6,6 @@ same-family config for CPU smoke tests.
 """
 from __future__ import annotations
 
-import dataclasses
 import importlib
 
 from repro.configs.base import (  # noqa: F401

@@ -1,6 +1,15 @@
 """The paper's contribution: workload -> system -> network simulation of
 RoCE congestion control for distributed training (see DESIGN.md)."""
-from repro.core.cc import ALL_POLICIES, get_policy  # noqa: F401
+from repro.core.cc import (  # noqa: F401
+    ALL_POLICIES,
+    FlowCtx,
+    ParamSpec,
+    Policy,
+    Signals,
+    get_policy,
+    policy_table_markdown,
+    stack_policies,
+)
 from repro.core.collectives import (  # noqa: F401
     COLLECTIVES,
     allreduce_1d,
@@ -13,6 +22,7 @@ from repro.core.collectives import (  # noqa: F401
     register_collective,
 )
 from repro.core.engine import (  # noqa: F401
+    FABRIC_PARAM_SPECS,
     EngineConfig,
     FabricParams,
     Results,
@@ -28,5 +38,10 @@ from repro.core.scenario import (  # noqa: F401
     register_topology,
     scenario_matrix,
 )
-from repro.core.sweep import BatchResults, SweepRunner, compile_stats  # noqa: F401
+from repro.core.sweep import (  # noqa: F401
+    BatchResults,
+    SweepRunner,
+    compile_stats,
+    grid_from_spec,
+)
 from repro.core.topology import LINK_CLASSES, clos, single_switch  # noqa: F401

@@ -8,11 +8,25 @@ Because our fluid network layer is pure JAX, the *whole simulation* is
 differentiable w.r.t. the CC policy parameters — and, since the scenario
 refactor, w.r.t. the fabric's ECN/PFC knobs (``FabricParams``) too.  We
 tune them by gradient descent on a soft objective (integral of undelivered
-traffic fraction + PFC pressure), replacing the paper's manual grid
-search.
+traffic fraction), replacing the paper's manual grid search.
+
+The search space is *declared*, not guessed: each tuned key's ``ParamSpec``
+(``Policy.spec`` for CC params, ``engine.FABRIC_PARAM_SPECS`` for fabric
+keys) decides how it moves —
+
+* ``scale="log"``   -> descent in log-space (positive scale-free knobs);
+* ``scale="linear"``-> descent in value space (bounded fractions);
+* ``lo``/``hi``     -> tuned values are *projected* onto the declared
+  bounds after every step (no more ``ecn_thresh`` drifting out of physical
+  range under unbounded ``exp`` updates); each projection is recorded in
+  ``TuneResult.history[i]["projected"]``;
+* ``integer=True``  -> rejected with a clear error: gradient descent
+  cannot tune count-valued params (``fast_rounds``, ``hai_after``,
+  ``max_stage``) — sweep them via ``SweepRunner.grid`` /
+  ``grid_from_spec`` instead.
 
 Population-based tuning: with ``population > 1`` the search runs a whole
-population of (log-space) parameter vectors through one ``vmap``-batched
+population of parameter vectors through one ``vmap``-batched
 ``value_and_grad`` per step — a single compiled simulation evaluates every
 member, so P-member tuning costs roughly one member's wall time, and the
 spread of deterministic initial offsets makes the gradient descent robust
@@ -27,8 +41,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cc import Policy
-from repro.core.engine import EngineConfig, FabricParams, Simulator, _as_fabric
+from repro.core.cc import ParamSpec, Policy
+from repro.core.engine import (FABRIC_PARAM_SPECS, EngineConfig,
+                               FabricParams, Simulator, _as_fabric)
 
 
 @dataclasses.dataclass
@@ -40,6 +55,25 @@ class TuneResult:
     fabric: FabricParams | None = None   # tuned fabric (when fabric_keys set)
 
 
+_FABRIC_NS = "fabric."
+
+
+def _tune_spec(policy: Policy, key: str) -> ParamSpec:
+    """ParamSpec of one tuned key (CC param or ``fabric.<field>``)."""
+    if key.startswith(_FABRIC_NS):
+        return FABRIC_PARAM_SPECS[key[len(_FABRIC_NS):]]
+    return policy.param_spec(key)
+
+
+def _check_tunable_by_gradient(policy: Policy, keys) -> None:
+    ints = [k for k in keys if _tune_spec(policy, k).integer]
+    if ints:
+        raise ValueError(
+            f"params {sorted(ints)} are integer-valued; gradient autotune "
+            "cannot tune them as continuous floats — sweep them instead "
+            "(SweepRunner.grid / grid_from_spec)")
+
+
 def autotune(topo, sched, policy: Policy, tune_keys: list[str],
              steps: int = 12, lr: float = 0.15,
              cfg: EngineConfig | None = None,
@@ -47,7 +81,8 @@ def autotune(topo, sched, policy: Policy, tune_keys: list[str],
              fabric_params: FabricParams | None = None,
              fabric_keys: list[str] | None = None,
              cc_params: dict | None = None) -> TuneResult:
-    """Gradient-descent the selected (log-space) params of ``policy``.
+    """Gradient-descent the selected params of ``policy`` along their
+    declared ``ParamSpec`` scales, projecting onto declared bounds.
 
     ``population`` > 1 tunes that many jittered members in one vmapped
     simulation per step (population-based tuning); the best member wins.
@@ -62,6 +97,9 @@ def autotune(topo, sched, policy: Policy, tune_keys: list[str],
         policy.check_tunable(cc_params)
     fabric_keys = list(fabric_keys or [])
     FabricParams.check_fields(fabric_keys)
+    all_keys = list(tune_keys) + [_FABRIC_NS + k for k in fabric_keys]
+    _check_tunable_by_gradient(policy, all_keys)
+    specs = {k: _tune_spec(policy, k) for k in all_keys}
     cfg = cfg or EngineConfig(dt=2e-6, max_steps=2500, max_extends=0,
                               queue_stride=0)
     sim = Simulator(topo, sched, policy, cfg, fabric_params=fabric_params)
@@ -75,65 +113,103 @@ def autotune(topo, sched, policy: Policy, tune_keys: list[str],
                 f"fabric param {k!r} holds a per-link-class array; autotune "
                 "tunes scalar fabric leaves only — tune a scalar base and "
                 "apply with_class afterwards")
-    all_keys = list(tune_keys) + [f"fabric.{k}" for k in fabric_keys]
 
-    def cost_fn(logp):
+    # z-space: log for scale="log" keys, identity for linear ones
+    def decode(k, z):
+        return jnp.exp(z) if specs[k].scale == "log" else z
+
+    def encode(k, v):
+        return np.log(v) if specs[k].scale == "log" else float(v)
+
+    def cost_fn(zp):
         params = dict(base)
         fab_over = {}
-        for k, v in logp.items():
-            if k.startswith("fabric."):
-                fab_over[k[len("fabric."):]] = jnp.exp(v)
+        for k, z in zp.items():
+            v = decode(k, z)
+            if k.startswith(_FABRIC_NS):
+                fab_over[k[len(_FABRIC_NS):]] = v
             else:
-                params[k] = jnp.exp(v)
+                params[k] = v
         fab = base_fab.replace(**fab_over) if fab_over else base_fab
         return cost_of_params(params, fab)
 
     def start_val(k):
-        if k.startswith("fabric."):
-            return float(np.asarray(getattr(base_fab, k[len("fabric."):])))
+        if k.startswith(_FABRIC_NS):
+            return float(np.asarray(getattr(base_fab, k[len(_FABRIC_NS):])))
         return float(base[k])
 
+    def project(zp):
+        """Clip every member onto the declared bounds; -> (zp, clamped
+        key list).  Projection happens in value space, so log- and
+        linear-scale keys share one code path."""
+        out, clamped = {}, []
+        for k, z in zp.items():
+            v = np.asarray(decode(k, jnp.asarray(z)))
+            vc = np.clip(v, specs[k].lo if specs[k].lo is not None else -np.inf,
+                         specs[k].hi if specs[k].hi is not None else np.inf)
+            if not np.array_equal(v, vc):
+                clamped.append(k)
+            out[k] = jnp.asarray([encode(k, x) for x in vc], jnp.float32)
+        return out, clamped
+
     P = max(int(population), 1)
-    # deterministic log-space jitter; member 0 sits exactly at the defaults
+    # deterministic z-space jitter; member 0 sits exactly at the defaults
     rng = np.random.default_rng(0)
     offs = np.zeros((P, len(all_keys)), np.float32)
     if P > 1:
         offs[1:] = rng.uniform(-spread, spread, size=(P - 1, len(all_keys)))
-    logp = {k: jnp.asarray(np.log(start_val(k)) + offs[:, i], jnp.float32)
-            for i, k in enumerate(all_keys)}
+    zp = {}
+    for i, k in enumerate(all_keys):
+        z0 = encode(k, start_val(k))
+        # linear-scale offsets move relative to the param's range
+        span = ((specs[k].hi - specs[k].lo)
+                if specs[k].scale == "linear" and specs[k].bounded else 1.0)
+        zp[k] = jnp.asarray(z0 + offs[:, i] * span, jnp.float32)
+    zp, _ = project(zp)           # initial population inside bounds
 
     vg = jax.jit(jax.vmap(jax.value_and_grad(cost_fn)))
     hist = []
     baseline = None
-    best, best_logp = np.inf, None
+    best, best_z = np.inf, None
+
+    def snapshot(i, c, projected):
+        j = int(np.argmin(c))
+        hist.append({"step": i, "cost": float(c[j]),
+                     "population_costs": [float(x) for x in c],
+                     "projected": sorted(projected),
+                     **{k: float(np.asarray(decode(k, jnp.asarray(v)))[j])
+                        for k, v in zp.items()}})
+        return j
+
+    projected_now: list = []
     for i in range(steps):
-        c, g = vg(logp)
+        c, g = vg(zp)
         c = np.asarray(c)
         if i == 0:
             baseline = float(c[0])
-        j = int(np.argmin(c))
+        j = snapshot(i, c, projected_now)
         if c[j] < best:
             best = float(c[j])
-            best_logp = {k: float(np.asarray(v)[j]) for k, v in logp.items()}
-        hist.append({"step": i, "cost": float(c[j]),
-                     "population_costs": [float(x) for x in c],
-                     **{k: float(np.exp(np.asarray(v)[j]))
-                        for k, v in logp.items()}})
-        # normalized gradient step in log space, every member in parallel
+            best_z = {k: float(np.asarray(v)[j]) for k, v in zp.items()}
+        # clipped-gradient step, every member in parallel, then projection
         gn = {k: jnp.clip(g[k], -10, 10) for k in g}
-        logp = {k: logp[k] - lr * gn[k] for k in logp}
-    if best_logp is None:                       # steps == 0: evaluate once
-        c = np.asarray(vg(logp)[0])
-        j = int(np.argmin(c))
+        zp = {k: zp[k] - lr * gn[k] for k in zp}
+        zp, projected_now = project(zp)
+    if best_z is None:                       # steps == 0: evaluate once
+        c = np.asarray(vg(zp)[0])
+        j = snapshot(0, c, [])
         baseline, best = float(c[0]), float(c[j])
-        best_logp = {k: float(np.asarray(v)[j]) for k, v in logp.items()}
-    tuned = {k: float(np.exp(v)) for k, v in best_logp.items()
-             if not k.startswith("fabric.")}
+        best_z = {k: float(np.asarray(v)[j]) for k, v in zp.items()}
+
+    def best_val(k):
+        return float(np.asarray(decode(k, jnp.asarray(best_z[k]))))
+
+    tuned = {k: best_val(k) for k in best_z if not k.startswith(_FABRIC_NS)}
     tuned_fab = None
     if fabric_keys:
         tuned_fab = base_fab.replace(
-            **{k[len("fabric."):]: float(np.exp(v))
-               for k, v in best_logp.items() if k.startswith("fabric.")})
+            **{k[len(_FABRIC_NS):]: best_val(k)
+               for k in best_z if k.startswith(_FABRIC_NS)})
     return TuneResult(params=dict(base, **tuned), history=hist,
                       baseline_cost=baseline, tuned_cost=best,
                       fabric=tuned_fab)

@@ -63,14 +63,13 @@ scenarios never retrace.  Declarative scenario construction
 from __future__ import annotations
 
 import dataclasses
-import inspect
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core.cc import Policy
+from repro.core.cc import FlowCtx, ParamSpec, Policy, Signals
 from repro.core.collectives import Schedule
 from repro.core.topology import (LINK_CLASS_ID, MAXHOP, N_LINK_CLASSES,
                                  Topology)
@@ -102,6 +101,19 @@ class EngineConfig:
 
 
 _FABRIC_DEFAULTS = dict(kmin=400e3, kmax=1600e3, pmax=0.2, xoff=1e6, xon=0.8e6)
+
+# declarative search spaces for the fabric knobs — same ParamSpec currency
+# as the CC policies, consumed by ``autotune`` (scale + bounds projection)
+# and ``sweep.grid_from_spec``
+FABRIC_PARAM_SPECS = {
+    "kmin": ParamSpec(_FABRIC_DEFAULTS["kmin"], lo=1e3, hi=64e6, scale="log"),
+    "kmax": ParamSpec(_FABRIC_DEFAULTS["kmax"], lo=4e3, hi=256e6, scale="log"),
+    "pmax": ParamSpec(_FABRIC_DEFAULTS["pmax"], lo=0.01, hi=1.0,
+                      scale="linear"),
+    "xoff": ParamSpec(_FABRIC_DEFAULTS["xoff"], lo=10e3, hi=64e6,
+                      scale="log"),
+    "xon": ParamSpec(_FABRIC_DEFAULTS["xon"], lo=10e3, hi=64e6, scale="log"),
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -436,12 +448,19 @@ def _prep(topo: Topology, sched: Schedule, cfg: EngineConfig,
     return pp, plan
 
 
-def _policy_init(policy: Policy, F: int, pp: dict):
-    # schedule-aware policies (StaticWindow) take the static fan-in too;
-    # dispatch on the signature so TypeErrors raised *inside* init surface
-    if "fanin" in inspect.signature(policy.init).parameters:
-        return policy.init(F, pp["line"], pp["bdp"], fanin=pp["fanin"])
-    return policy.init(F, pp["line"], pp["bdp"])
+def _flow_ctx(pp: dict, F: int) -> FlowCtx:
+    """The typed per-flow context every policy's ``init`` receives — the
+    whole engine->init contract, no signature introspection."""
+    return FlowCtx(line=pp["line"], bdp=pp["bdp"], fanin=pp["fanin"],
+                   n_flows=F)
+
+
+def _wire_of(policy: Policy, cc_params: dict | None):
+    """Wire factor: static per policy, traced via the ``_wire`` param for
+    stacked policies (members differ — HPCC INT carries +4.8%)."""
+    if cc_params is not None and "_wire" in cc_params:
+        return jnp.asarray(cc_params["_wire"], jnp.float32)
+    return jnp.float32(policy.wire_factor)
 
 
 def _n_qrows(cfg: EngineConfig) -> int:
@@ -449,11 +468,12 @@ def _n_qrows(cfg: EngineConfig) -> int:
     return -(-total // cfg.queue_stride) if cfg.queue_stride > 0 else 0
 
 
-def _init_carry(pp, plan: _Plan, policy: Policy, cfg: EngineConfig):
+def _init_carry(pp, plan: _Plan, policy: Policy, cfg: EngineConfig,
+                cc_params: dict | None = None):
     Fp, Lk, D = plan.n_flows_pad, plan.n_links, plan.n_dev
     carry = dict(
         backlog=jnp.zeros((Fp, MAXHOP), jnp.float32),
-        remaining=pp["size"] * policy.wire_factor,
+        remaining=pp["size"] * _wire_of(policy, cc_params),
         injected=jnp.zeros(Fp, jnp.float32),
         delivered=jnp.zeros(Fp, jnp.float32),
         done=~pp["active"],           # padded flows are born finished
@@ -469,7 +489,7 @@ def _init_carry(pp, plan: _Plan, policy: Policy, cfg: EngineConfig):
         # DCTCP keeps bdp); the carry is donated, so aliases would delete
         # buffers that pp still needs on the next run
         cc=jax.tree_util.tree_map(lambda x: jnp.asarray(x).copy(),
-                                  _policy_init(policy, Fp, pp)),
+                                  policy.init(_flow_ctx(pp, Fp))),
         soft=jnp.zeros((), jnp.float32),
     )
     if cfg.queue_stride > 0:
@@ -480,11 +500,11 @@ def _init_carry(pp, plan: _Plan, policy: Policy, cfg: EngineConfig):
 def _make_step(policy: Policy, cfg: EngineConfig, plan: _Plan):
     dt = cfg.dt
     Lk = plan.n_links
-    wire = jnp.float32(policy.wire_factor)
     stride = cfg.queue_stride
     n_qrows = _n_qrows(cfg)
 
     def step(carry, it, pp, cc_params, fab):
+        wire = _wire_of(policy, cc_params)
         path, hopmask = pp["path"], pp["hopmask"]
         t = it.astype(jnp.float32) * dt
         # per-link-class fabric knobs (scalar leaves broadcast to uniform)
@@ -504,8 +524,9 @@ def _make_step(policy: Policy, cfg: EngineConfig, plan: _Plan):
         ecn = 1.0 - jnp.prod(1.0 - mark, axis=1)
         util_l = tx_d / caps + q_d / (caps * cfg.t_base_util)
         util = jnp.max(jnp.where(hopmask, util_l, 0.0), axis=1)
-        sig = {"ecn": ecn, "rtt": rtt, "util": util, "t": t, "dt": dt,
-               "line": pp["line"], "base_rtt": pp["base_rtt"]}
+        sig = Signals(ecn=ecn, rtt=rtt, util=util, t=t,
+                      dt=jnp.float32(dt), line=pp["line"],
+                      base_rtt=pp["base_rtt"])
 
         # ---- 2. CC update -------------------------------------------------
         cc, rate, win = policy.update(cc_params, carry["cc"], sig)
@@ -658,7 +679,10 @@ def _policy_cache_key(policy: Policy):
     return (policy.name, float(policy.wire_factor),
             getattr(policy.init, "__code__", policy.init),
             getattr(policy.update, "__code__", policy.update),
-            tuple(sorted((k, float(v)) for k, v in policy.params.items())))
+            tuple(sorted((k, float(v)) for k, v in policy.params.items())),
+            # stacked policies share closure code objects; their member
+            # identity tokens live in key_extra
+            policy.key_extra)
 
 
 def compiled_run(policy: Policy, cfg: EngineConfig, plan: _Plan,
@@ -697,7 +721,7 @@ class Simulator:
         params = cc_params if cc_params is not None else self.policy.params
         fab = fabric_params if fabric_params is not None else self.fabric
         fn = compiled_run(self.policy, self.cfg, self.plan, early_exit)
-        carry = _init_carry(self.pp, self.plan, self.policy, self.cfg)
+        carry = _init_carry(self.pp, self.plan, self.policy, self.cfg, params)
         carry, steps = fn(carry, self.pp, params, fab)
         return self._results(carry, int(steps))
 
@@ -742,7 +766,7 @@ class Simulator:
         default_fab = self.fabric
 
         def cost(cc_params, fabric_params=default_fab):
-            carry = _init_carry(pp, plan, policy, cfg)
+            carry = _init_carry(pp, plan, policy, cfg, cc_params)
             carry, _ = run(carry, pp, cc_params, fabric_params)
             return carry["soft"]
 

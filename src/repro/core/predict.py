@@ -93,10 +93,19 @@ def predict_policies(ops, mesh_shape, axis_of_op, policies=None,
                      topo: Topology | None = None,
                      cfg: EngineConfig | None = None,
                      runner: SweepRunner | None = None,
-                     fabric: FabricSpec | None = None) -> list[PredictReport]:
-    """Reports don't consume queue timelines, so recording is off; pass a
-    shared ``runner`` to reuse compiled engines across calls (shape-bucket
-    padding makes same-sized schedules hit the same executable)."""
+                     fabric: FabricSpec | None = None,
+                     batched: bool | None = None) -> list[PredictReport]:
+    """One training iteration's collective mix under each CC policy.
+
+    ``batched=True`` stacks the policies into one product policy and runs
+    the whole comparison as a single vmapped dispatch
+    (``SweepRunner.run_policy_axis``): one compile, one call, B = number
+    of policies.  ``batched=False`` runs serially per policy (each run
+    early-exits).  The default (None) picks per scenario via
+    ``SweepRunner.policy_axis_pays_off`` — batched where the vmap axis
+    vectorizes (accelerators), serial on CPU.
+    Reports don't consume queue timelines, so recording is off; pass a
+    shared ``runner`` to reuse compiled engines across calls."""
     # oversubscription=2.0 == the seed clos() default of 8 spines
     fab = fabric if fabric is not None else \
         (topo if topo is not None
@@ -106,8 +115,20 @@ def predict_policies(ops, mesh_shape, axis_of_op, policies=None,
                               queue_stride=0)
     runner = runner or SweepRunner(cfg)
     workload = HLOReplaySpec(tuple(ops), tuple(mesh_shape), tuple(axis_of_op))
+    policies = tuple(policies or cc_mod.ALL_POLICIES)
+    topo_b, sched, _ = ScenarioSpec(fabric=fab, workload=workload,
+                                    policy=policies).build()
+    if batched is None:
+        batched = runner.policy_axis_pays_off()
+    if batched:
+        batch = runner.run_policy_axis(topo_b, sched, policies, cfg=cfg)
+        return [PredictReport(batch.policy_of(i),
+                              float(batch.completion_time[i]),
+                              float(batch.pause_count[i].sum()),
+                              bool(batch.finished[i]))
+                for i in range(batch.n)]
     specs = [ScenarioSpec(fabric=fab, workload=workload, policy=p)
-             for p in (policies or cc_mod.ALL_POLICIES)]
+             for p in policies]
     out = []
     for res in runner.run_specs(specs, cfg=cfg):
         out.append(PredictReport(res.meta["policy"], res.completion_time,

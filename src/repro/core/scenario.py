@@ -30,7 +30,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
-from repro.core.cc import Policy, get_policy
+from repro.core.cc import get_policy, stack_policies
 from repro.core.collectives import Schedule, get_collective, incast
 from repro.core.engine import EngineConfig, FabricParams, Results
 from repro.core.topology import (NIC_BW, NIC_LAT, NVLINK_BW, NVLINK_LAT,
@@ -170,16 +170,20 @@ class IncastSpec:
 class ScenarioSpec:
     """One fully-specified simulation point.
 
-    ``policy`` is a registry name or a ``Policy``; ``cc_params`` and
-    ``fabric_params`` are traced per-run overrides, so specs differing only
-    there share one compiled engine (and can be batched -- see
-    ``SweepRunner.grid_spec``).  ``fabric`` is normally a declarative
-    ``FabricSpec``; a prebuilt ``Topology`` is also accepted so callers
-    holding one (tests, calibration drivers) can still ride the spec path.
+    ``policy`` is a registry name, a ``Policy``, or a *tuple* of either —
+    a tuple declares a whole policy axis, built into one stacked product
+    policy (``cc.stack_policies``) whose lanes batch through a single
+    vmapped dispatch (``SweepRunner.grid_spec`` / ``run_policy_axis``).
+    ``cc_params`` and ``fabric_params`` are traced per-run overrides, so
+    specs differing only there share one compiled engine (and can be
+    batched -- see ``SweepRunner.grid_spec``).  ``fabric`` is normally a
+    declarative ``FabricSpec``; a prebuilt ``Topology`` is also accepted
+    so callers holding one (tests, calibration drivers) can still ride
+    the spec path.
     """
     fabric: object                 # FabricSpec | Topology
     workload: object               # has build_schedule(topo) -> Schedule
-    policy: object = "pfc"         # str (cc.REGISTRY name) or Policy
+    policy: object = "pfc"         # str | Policy | tuple (policy axis)
     cc_params: dict | None = None
     fabric_params: FabricParams | None = None
     name: str = ""
@@ -205,8 +209,12 @@ class ScenarioSpec:
                 while len(_SCHED_CACHE) >= _SCHED_CACHE_MAX:
                     _SCHED_CACHE.pop(next(iter(_SCHED_CACHE)))
                 _SCHED_CACHE[key] = sched
-        pol = (get_policy(self.policy) if isinstance(self.policy, str)
-               else self.policy)
+        if isinstance(self.policy, (tuple, list)):
+            pol = stack_policies(self.policy)
+        elif isinstance(self.policy, str):
+            pol = get_policy(self.policy)
+        else:
+            pol = self.policy
         return topo, sched, pol
 
     def run(self, runner=None, cfg: EngineConfig | None = None) -> Results:
@@ -217,8 +225,14 @@ class ScenarioSpec:
 
 
 def scenario_matrix(fabrics, workloads, policies,
-                    fabric_params=None) -> list[ScenarioSpec]:
-    """Cross-product helper: the paper's per-figure loops as one list."""
+                    fabric_params=None, stacked=False) -> list[ScenarioSpec]:
+    """Cross-product helper: the paper's per-figure loops as one list.
+
+    ``stacked=True`` folds the policy dimension into each spec instead of
+    enumerating it: one spec per (fabric, workload) whose ``policy`` is the
+    whole tuple, so ``SweepRunner`` runs the comparison as one vmapped
+    policy-axis dispatch rather than a serial per-policy loop.
+    """
     fabrics = [fabrics] if isinstance(fabrics, (FabricSpec, Topology)) \
         else list(fabrics)
     out = []
@@ -226,9 +240,15 @@ def scenario_matrix(fabrics, workloads, policies,
         fname = (f"{fab.family}{fab.n_gpus}" if isinstance(fab, FabricSpec)
                  else fab.name)
         for wl in workloads:
+            wname = getattr(wl, "kind", type(wl).__name__)
+            if stacked:
+                out.append(ScenarioSpec(
+                    fabric=fab, workload=wl, policy=tuple(policies),
+                    fabric_params=fabric_params,
+                    name=f"{fname}_{wname}_stack"))
+                continue
             for pol in policies:
                 pname = pol if isinstance(pol, str) else pol.name
-                wname = getattr(wl, "kind", type(wl).__name__)
                 out.append(ScenarioSpec(
                     fabric=fab, workload=wl, policy=pol,
                     fabric_params=fabric_params,

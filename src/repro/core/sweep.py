@@ -16,7 +16,16 @@ one executable per ``(policy logic, EngineConfig, static plan)``.
   autotuning into one dispatch — zero recompiles after warmup;
 * **scenario specs** — ``run_spec`` / ``run_specs`` / ``grid_spec`` accept
   the declarative ``repro.core.scenario.ScenarioSpec``, so drivers list
-  scenarios instead of hand-assembling topology + schedule + policy.
+  scenarios instead of hand-assembling topology + schedule + policy;
+* **a batched policy axis** — ``run_policy_axis`` stacks several CC
+  policies into one product policy (``cc.stack_policies``: superset state
+  + ``lax.switch`` on a traced selector) and runs the whole comparison as
+  ONE vmapped dispatch; ``grid(..., policy_axis=[...])`` crosses that axis
+  with CC-param and fabric grids, so the paper's policy-comparison figures
+  are a single compiled call with zero recompiles after warmup;
+* **spec-driven grids** — ``grid_from_spec(policy, n_points)`` generates
+  grid axes from each policy's declared ``ParamSpec`` ranges (log/linear
+  spacing, integer rounding) instead of hand-picked value lists.
 
 Batched runs never record the per-device queue timeline (it is a
 per-member ``(T, D)`` buffer); use a plain ``run`` for Fig 5-7 style plots.
@@ -46,10 +55,14 @@ import jax
 import numpy as np
 
 from repro.core import cc as cc_mod
-from repro.core.cc import Policy
+from repro.core.cc import Policy, stack_policies
 from repro.core.engine import (EngineConfig, FabricParams, Results, Simulator,
                                _as_fabric, _cfg_static, _init_carry,
                                _make_run, _next_pow2, _policy_cache_key)
+
+
+def _resolve(policy) -> Policy:
+    return cc_mod.get_policy(policy) if isinstance(policy, str) else policy
 
 
 def _bucket(n: int, lo: int = 32) -> int:
@@ -68,6 +81,7 @@ class BatchResults:
     delivered: np.ndarray         # (B, F)
     soft_cost: np.ndarray         # (B,)
     finished: np.ndarray          # (B,) bool
+    policy_axis: tuple = ()       # per-member policy label (policy sweeps)
 
     @property
     def n(self) -> int:
@@ -80,6 +94,13 @@ class BatchResults:
                              "budget; raise max_steps/max_extends")
         ct = np.where(self.finished, self.completion_time, np.inf)
         return int(np.argmin(ct))
+
+    def policy_of(self, i: int) -> str:
+        """Policy label of member ``i`` (== ``policy`` without an axis)."""
+        if self.policy_axis:
+            return self.policy_axis[int(np.asarray(
+                self.params["_which"])[i])]
+        return self.policy
 
     def param_set(self, i: int) -> dict:
         return {k: float(np.asarray(v)[i]) for k, v in self.params.items()}
@@ -101,7 +122,7 @@ def _compiled_batch(policy: Policy, cfg: EngineConfig, plan):
         run = _make_run(policy, cfg, plan, early_exit=True)
 
         def one(pp, params, fab):
-            carry = _init_carry(pp, plan, policy, cfg)
+            carry = _init_carry(pp, plan, policy, cfg, params)
             carry, steps = run(carry, pp, params, fab)
             return {"t_finish": carry["t_finish"], "done": carry["done"],
                     "pause_count": carry["pause_count"],
@@ -126,6 +147,42 @@ def compile_stats() -> dict:
         "compiled_executables": n_exec(engine_mod._RUN_CACHE.values())
         + n_exec(_BATCH_CACHE.values()),
     }
+
+
+def grid_from_spec(policy: Policy | str, n_points: int = 3,
+                   keys: list | None = None) -> dict:
+    """Generate grid axes from a policy's declared ``ParamSpec`` ranges.
+
+    Each selected tunable, *bounded* param gets ``n_points`` values
+    spanning [lo, hi] — geometrically spaced where the spec declares
+    ``scale="log"``, linearly otherwise, rounded + deduplicated for
+    integer params.  Feed the result straight to ``SweepRunner.grid``:
+
+        runner.grid(topo, sched, "dcqcn", grid_from_spec("dcqcn", 3,
+                                                         ["rai_frac", "g"]))
+    """
+    policy = _resolve(policy)
+    if keys is None:
+        keys = [k for k, s in policy.spec.items()
+                if not s.init_baked and s.bounded and not k.startswith("_")]
+    else:
+        policy.check_tunable(keys)
+    axes = {}
+    for k in keys:
+        s = policy.param_spec(k)
+        if not s.bounded:
+            raise ValueError(f"{policy.name} param {k!r} declares no "
+                             "lo/hi bounds; pass explicit grid values")
+        if s.scale == "log":
+            vals = np.geomspace(s.lo, s.hi, n_points)
+        else:
+            vals = np.linspace(s.lo, s.hi, n_points)
+        if s.integer:
+            vals = np.unique(np.round(vals))
+        axes[k] = [float(v) for v in vals]
+    if not axes:
+        raise ValueError(f"{policy.name} has no bounded tunable params")
+    return axes
 
 
 def _stack_fabric(base: FabricParams, stacked: dict | None, B: int) -> FabricParams:
@@ -161,6 +218,14 @@ class SweepRunner:
     # so cap the count and evict FIFO; compiled executables live in the
     # engine's global cache and survive eviction
     MAX_SIMS = 64
+
+    # CPU crossover for batched stepping: the vmap path wins while per-op
+    # dispatch dominates (~<2k flows: 4.9x at B=8 on the dev container)
+    # and loses on gather-bound giants where it also forfeits early-exit
+    # (0.3x on the 7936-flow 32-GPU All-Reduce; BENCH_engine.json
+    # sweep_vmap vs policy_axis).  Accelerator backends vectorize the
+    # batch axis fully, so the batched path always wins there.
+    CPU_BATCH_FLOWS = 2048
 
     def __init__(self, cfg: EngineConfig | None = None, bucket: bool = True):
         self.cfg = cfg or EngineConfig()
@@ -203,7 +268,7 @@ class SweepRunner:
             cc_params: dict | None = None,
             cfg: EngineConfig | None = None,
             fabric_params: FabricParams | None = None) -> Results:
-        policy = cc_mod.get_policy(policy) if isinstance(policy, str) else policy
+        policy = _resolve(policy)
         cfg = cfg or self.cfg
         # resolve the fabric from the *caller's* cfg: the cached Simulator
         # may have been built under a different default
@@ -214,16 +279,86 @@ class SweepRunner:
     def run_policies(self, topo, sched, policies=None,
                      cfg: EngineConfig | None = None,
                      fabric_params: FabricParams | None = None) -> list[Results]:
-        """One scenario under each CC policy (the paper's per-figure loop)."""
+        """One scenario under each CC policy, serially — full ``Results``
+        per policy (queue timelines included); ``run_policy_axis`` runs the
+        same comparison as one vmapped dispatch."""
         out = []
         for p in (policies or cc_mod.ALL_POLICIES):
             out.append(self.run(topo, sched, p, cfg=cfg,
                                 fabric_params=fabric_params))
         return out
 
+    def batch_pays_off(self, sched) -> bool:
+        """Heuristic: should a *same-policy* parameter sweep over this
+        scenario run batched (one vmapped dispatch) or serial?"""
+        return (jax.default_backend() != "cpu"
+                or sched.n_flows <= self.CPU_BATCH_FLOWS)
+
+    def policy_axis_pays_off(self) -> bool:
+        """Like ``batch_pays_off`` but for the stacked policy axis, which
+        additionally evaluates *every* member's update per lane (vmapped
+        ``lax.switch`` runs all branches): on CPU the serial per-policy
+        loop wins at every measured scale (BENCH_engine.json policy_axis),
+        so the axis defaults to batched only where the batch dimension
+        truly vectorizes — the win on CPU is architectural (one compile,
+        zero recompiles across policy x param x fabric grids), not
+        wall-clock."""
+        return jax.default_backend() != "cpu"
+
+    # -- the batched policy axis --------------------------------------------
+    def run_policy_axis(self, topo, sched, policies=None,
+                        cc_overrides: list | None = None,
+                        cfg: EngineConfig | None = None,
+                        fabric_params: FabricParams | None = None,
+                        stacked_fabric: dict | None = None) -> BatchResults:
+        """The paper's per-figure policy comparison as ONE vmapped dispatch.
+
+        Stacks ``policies`` into a product policy (``cc.stack_policies``)
+        and vmaps over its traced ``_which`` selector: B = len(policies)
+        lanes, each simulating one member, sharing a single compiled
+        executable.  ``cc_overrides`` optionally gives a per-member
+        cc_params dict (positionally aligned with ``policies``);
+        ``stacked_fabric`` may additionally stack per-lane FabricParams
+        leaves (length B, aligned with the policy lanes).  The result's
+        ``policy_axis``/``policy_of`` label each lane.
+        """
+        members = [_resolve(p) for p in (policies or cc_mod.ALL_POLICIES)]
+        stacked_pol = stack_policies(members)
+        labels = stacked_pol.members
+        B = len(members)
+        params = {
+            "_which": np.arange(B, dtype=np.float32),
+            "_wire": np.asarray([m.wire_factor for m in members],
+                                np.float32),
+        }
+        if cc_overrides:
+            if len(cc_overrides) != B:
+                raise ValueError(f"cc_overrides has {len(cc_overrides)} "
+                                 f"entries for {B} policies")
+            for i, (lab, m, over) in enumerate(
+                    zip(labels, members, cc_overrides)):
+                if not over:
+                    continue
+                m.check_tunable(over)
+                for k, v in over.items():
+                    key = f"{lab}.{k}"
+                    col = params.get(key)
+                    if col is None:
+                        col = np.full(B, float(m.params[k]), np.float32)
+                    col[i] = float(v)     # only lane i reads member i's params
+                    params[key] = col
+        return self.run_batch(topo, sched, stacked_pol, params,
+                              stacked_fabric=stacked_fabric,
+                              fabric_params=fabric_params, cfg=cfg,
+                              policy_axis=tuple(labels))
+
     # -- declarative scenarios ----------------------------------------------
     def run_spec(self, spec, cfg: EngineConfig | None = None) -> Results:
         """Simulate one ``ScenarioSpec`` (shape-bucketed + compile-cached)."""
+        if isinstance(spec.policy, (tuple, list)):
+            raise ValueError(
+                "spec declares a policy axis (tuple policy); run it batched "
+                "via grid_spec/run_policy_axis, or pick one member")
         topo, sched, policy = spec.build()
         cc = None
         if spec.cc_params:
@@ -240,7 +375,15 @@ class SweepRunner:
     def grid_spec(self, spec, param_grid: dict | None = None,
                   fabric_grid: dict | None = None,
                   cfg: EngineConfig | None = None) -> BatchResults:
-        """Full-factorial CC x fabric grid on one ``ScenarioSpec``."""
+        """Full-factorial CC x fabric grid on one ``ScenarioSpec``.  A spec
+        whose ``policy`` is a tuple/list sweeps the policy axis too (one
+        vmapped policy x CC-param x fabric dispatch)."""
+        if isinstance(spec.policy, (tuple, list)):
+            topo, sched, _ = spec.build()
+            return self.grid(topo, sched, None, param_grid, fabric_grid,
+                             fabric_params=spec.fabric_params,
+                             cc_params=spec.cc_params, cfg=cfg,
+                             policy_axis=list(spec.policy))
         topo, sched, policy = spec.build()
         return self.grid(topo, sched, policy, param_grid, fabric_grid,
                          fabric_params=spec.fabric_params,
@@ -252,7 +395,8 @@ class SweepRunner:
                   stacked_fabric: dict | None = None,
                   fabric_params: FabricParams | None = None,
                   cc_params: dict | None = None,
-                  cfg: EngineConfig | None = None) -> BatchResults:
+                  cfg: EngineConfig | None = None,
+                  policy_axis: tuple = ()) -> BatchResults:
         """Simulate B (CC params, FabricParams) sets in one vmapped call.
 
         ``stacked_params`` maps CC param name -> length-B array;
@@ -261,8 +405,10 @@ class SweepRunner:
         ``cc_params``); missing fabric fields broadcast from
         ``fabric_params`` (default: the runner config's scalars).  Queue
         timelines are never recorded for batched runs (per-member buffers).
+        ``policy_axis`` carries the per-lane policy labels when ``policy``
+        is a stacked product policy (see ``run_policy_axis``).
         """
-        policy = cc_mod.get_policy(policy) if isinstance(policy, str) else policy
+        policy = _resolve(policy)
         stacked_params = stacked_params or {}
         policy.check_tunable(stacked_params)
         if cc_params:
@@ -296,14 +442,16 @@ class SweepRunner:
             delivered=np.asarray(out["delivered"])[:, :F],
             soft_cost=np.asarray(out["soft"]),
             finished=done.all(axis=1),
+            policy_axis=tuple(policy_axis),
         )
 
-    def grid(self, topo, sched, policy: Policy | str,
+    def grid(self, topo, sched, policy: Policy | str | None = None,
              param_grid: dict | None = None,
              fabric_grid: dict | None = None,
              fabric_params: FabricParams | None = None,
              cc_params: dict | None = None,
-             cfg: EngineConfig | None = None) -> BatchResults:
+             cfg: EngineConfig | None = None,
+             policy_axis: list | None = None) -> BatchResults:
         """Full-factorial joint sweep: CC ``{param: [values...]}`` x fabric
         ``{field: [values...]}`` -> ONE vmapped batched run.
 
@@ -311,6 +459,13 @@ class SweepRunner:
         one grid point).  With both grids given, the batch enumerates the
         full cross product — e.g. 3 kmin x 3 xoff x 4 CC points = B=36 in
         a single compiled dispatch.
+
+        ``policy_axis`` adds the *policy* as a grid dimension: the named
+        policies are stacked into one product policy and the cross product
+        gains a lane per member (policy x CC-param x fabric, still one
+        dispatch).  With a policy axis, ``policy`` must be None and
+        ``param_grid`` keys must be member-namespaced (``"dcqcn.rai_frac"``
+        — only that member's lanes respond to the axis).
         """
         param_grid = param_grid or {}
         fabric_grid = fabric_grid or {}
@@ -318,18 +473,43 @@ class SweepRunner:
         if overlap:
             raise ValueError(f"params {sorted(overlap)} appear in both the "
                              "CC and fabric grids")
+        labels, wires = (), None
+        if policy_axis is not None:
+            if policy is not None:
+                raise ValueError("pass either policy or policy_axis, "
+                                 "not both")
+            members = [_resolve(p) for p in policy_axis]
+            wires = np.asarray([m.wire_factor for m in members], np.float32)
+            policy = stack_policies(members)
+            labels = policy.members
+            bad = {k for k in param_grid if "." not in k}
+            if bad:
+                raise ValueError(
+                    f"param_grid keys {sorted(bad)} are not member-"
+                    "namespaced; with a policy_axis use '<policy>.<param>' "
+                    f"(members: {list(labels)})")
+        elif policy is None:
+            raise ValueError("policy is required without a policy_axis")
         axes = [np.asarray(v, np.float32)
                 for v in list(param_grid.values()) + list(fabric_grid.values())]
+        names = list(param_grid) + list(fabric_grid)
+        if policy_axis is not None:
+            names.append("_which")
+            axes.append(np.arange(len(labels), dtype=np.float32))
         if not axes:
             raise ValueError("empty grid")
         # index-space meshgrid so per-class (point, C)-shaped fabric axes
         # enumerate points along axis 0
         idx = np.meshgrid(*[np.arange(len(a)) for a in axes], indexing="ij")
         flat = [i.reshape(-1) for i in idx]
-        names = list(param_grid) + list(fabric_grid)
         stacked = {k: axes[j][flat[j]] for j, k in enumerate(names)}
+        stacked_cc = {k: stacked[k] for k in names if k not in fabric_grid}
+        if wires is not None:
+            # the wire factor is paired with the selected member, never an
+            # independent axis
+            stacked_cc["_wire"] = wires[stacked["_which"].astype(np.int64)]
         return self.run_batch(
-            topo, sched, policy,
-            {k: stacked[k] for k in param_grid},
+            topo, sched, policy, stacked_cc,
             stacked_fabric={k: stacked[k] for k in fabric_grid},
-            fabric_params=fabric_params, cc_params=cc_params, cfg=cfg)
+            fabric_params=fabric_params, cc_params=cc_params, cfg=cfg,
+            policy_axis=labels)

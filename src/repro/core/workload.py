@@ -16,10 +16,9 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
 
 from repro.core.collectives import Schedule, ScheduleBuilder, _direct_phase
-from repro.core.engine import EngineConfig, Results, simulate
+from repro.core.engine import EngineConfig, simulate
 from repro.core.scenario import ScenarioSpec
 from repro.core.topology import Topology
 
@@ -56,7 +55,6 @@ def build_dlrm_iteration(topo: Topology, gpus: list,
                          comm: DLRMCommSpec = DLRMCommSpec()) -> Schedule:
     """One DLRM training iteration as a dependency-tagged flow schedule."""
     b = ScheduleBuilder(topo)
-    P = len(gpus)
 
     # ---- forward ----------------------------------------------------------
     # embedding lookup finishes at emb_lookup; fwd A2A starts then
@@ -73,8 +71,8 @@ def build_dlrm_iteration(topo: Topology, gpus: list,
     # ---- backward ---------------------------------------------------------
     g_topb = b.new_group("top_bwd_done")
     b.add_marker(g_topb, dep=g_top, delay=prof.top_bwd)
-    a2a_b = _add_a2a(b, gpus, comm.alltoall_bwd_bytes, comm.n_chunks,
-                     dep=g_topb, tag="a2a_bwd")
+    _add_a2a(b, gpus, comm.alltoall_bwd_bytes, comm.n_chunks,
+             dep=g_topb, tag="a2a_bwd")
     g_botb = b.new_group("bot_bwd_done")
     b.add_marker(g_botb, dep=g_topb, delay=prof.bot_bwd)
 
@@ -167,6 +165,45 @@ class IterationReport:
     pfc_pauses: int
     policy: str
     finished: bool
+
+
+def simulate_dlrm_policies(topo: Topology, gpus: list, policies=None,
+                           prof: DLRMComputeProfile = DLRMComputeProfile(),
+                           comm: DLRMCommSpec = DLRMCommSpec(),
+                           cfg: EngineConfig = EngineConfig(dt=2e-6),
+                           runner=None,
+                           batched: bool | None = None) -> list[IterationReport]:
+    """The Fig-10 per-policy loop as ONE vmapped policy-axis dispatch:
+    every CC policy simulates the same DLRM iteration in a single compiled
+    call (``SweepRunner.run_policy_axis``).  ``batched=None`` defers to
+    ``SweepRunner.policy_axis_pays_off`` (serial fallback on CPU, same
+    reports either way)."""
+    from repro.core import cc as cc_mod
+    from repro.core.sweep import SweepRunner
+    runner = runner or SweepRunner(cfg)
+    sched = build_dlrm_iteration(topo, gpus, prof, comm)
+    policies = tuple(policies or cc_mod.ALL_POLICIES)
+    if batched is None:
+        batched = runner.policy_axis_pays_off()
+    if not batched:
+        from repro.core.cc import get_policy
+        return [simulate_dlrm_iteration(
+                    topo, gpus, get_policy(p) if isinstance(p, str) else p,
+                    prof, comm, cfg=cfg, runner=runner)
+                for p in policies]
+    batch = runner.run_policy_axis(topo, sched, policies, cfg=cfg)
+    out = []
+    for i in range(batch.n):
+        iter_time = float(batch.completion_time[i]) + prof.opt_update
+        out.append(IterationReport(
+            iteration_time=iter_time,
+            total_compute=prof.total,
+            exposed_comm=max(iter_time - prof.total, 0.0),
+            pfc_pauses=int(batch.pause_count[i].sum()),
+            policy=batch.policy_of(i),
+            finished=bool(batch.finished[i]),
+        ))
+    return out
 
 
 def simulate_dlrm_iteration(topo: Topology, gpus: list, policy,

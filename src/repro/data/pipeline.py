@@ -14,7 +14,6 @@ from typing import Callable, Iterator
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 
 def lm_batch(seed: int, step: int, global_batch: int, seq: int, vocab: int) -> dict:

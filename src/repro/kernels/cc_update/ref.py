@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.cc import make_dcqcn
+from repro.core.cc import Signals, make_dcqcn
 
 
 def dcqcn_update_tiled_ref(state2d, ecn2d, line2d, t, params):
@@ -15,9 +15,10 @@ def dcqcn_update_tiled_ref(state2d, ecn2d, line2d, t, params):
     rc, rt, alpha, t_cut, t_inc, t_alpha, cnt, jit = [a.reshape(-1) for a in state2d]
     st = {"rc": rc, "rt": rt, "alpha": alpha, "jit": jit, "t_cut": t_cut,
           "t_inc": t_inc, "t_alpha": t_alpha, "inc_count": cnt}
-    sig = {"ecn": ecn2d.reshape(-1), "rtt": jnp.zeros_like(rc),
-           "util": jnp.zeros_like(rc), "t": t, "dt": 1e-6,
-           "line": line2d.reshape(-1), "base_rtt": jnp.zeros_like(rc)}
+    sig = Signals(ecn=ecn2d.reshape(-1), rtt=jnp.zeros_like(rc),
+                  util=jnp.zeros_like(rc), t=jnp.asarray(t, jnp.float32),
+                  dt=jnp.float32(1e-6), line=line2d.reshape(-1),
+                  base_rtt=jnp.zeros_like(rc))
     st2, rate, _ = pol.update(pol.params, st, sig)
     shape = state2d[0].shape
     order = ("rc", "rt", "alpha", "t_cut", "t_inc", "t_alpha", "inc_count")

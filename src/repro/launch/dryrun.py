@@ -50,7 +50,7 @@ def corrected_totals(hlo_text: str) -> dict:
 def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
                 verbose: bool = True) -> dict:
     from repro.common.pytree import abstract, count_params
-    from repro.configs import get_config, get_model
+    from repro.configs import get_model
     from repro.configs.shapes import ALL_SHAPES, skip_reason
     from repro.launch.mesh import make_production_mesh
     from repro.train.optimizer import init_opt_state, opt_state_specs
@@ -92,7 +92,6 @@ def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
         if repl:
             model = Model(dataclasses.replace(cfg, **repl), mesh)
             cfg = model.cfg
-    rules = model.rules() if hasattr(model, "rules") else None
 
     p_defs = model.param_defs()
     p_abs = abstract(p_defs)

@@ -10,7 +10,6 @@ via ft.TrainRunner; --fail-at N injects a failure to exercise restart.
 from __future__ import annotations
 
 import argparse
-import os
 
 import jax
 import jax.numpy as jnp

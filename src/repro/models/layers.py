@@ -14,8 +14,6 @@ and ``*_apply(params, x, ...) -> y``.  Attention comes in three flavours:
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -246,9 +244,9 @@ def _partial_dense(q, k, v, *, softcap, mask=None):
         s = jnp.where(mask[None, None, None], s, NEG_INF)
     m = s.max(-1)
     p = jnp.exp(s - m[..., None])
-    l = p.sum(-1)
+    lsum = p.sum(-1)
     out = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v.dtype), v).astype(jnp.float32)
-    return out, m, l
+    return out, m, lsum
 
 
 def _merge_two(q, k1, v1, k2, v2, *, softcap, q_offset, prefix_len,
@@ -391,8 +389,8 @@ def decode_attention(q, k_cache, v_cache, *, length: jax.Array,
     s = jnp.where(mask, s, NEG_INF)
     m = s.max(-1, keepdims=True)
     p = jnp.exp(s - m)
-    l = p.sum(-1, keepdims=True)
-    o = jnp.einsum("bhgk,bkhd->bhgd", (p / jnp.maximum(l, 1e-30)).astype(v_cache.dtype),
+    lsum = p.sum(-1, keepdims=True)
+    o = jnp.einsum("bhgk,bkhd->bhgd", (p / jnp.maximum(lsum, 1e-30)).astype(v_cache.dtype),
                    v_cache)
     return o.reshape(B, 1, Hq, D)
 

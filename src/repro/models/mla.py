@@ -107,7 +107,6 @@ def mla_decode(p, x, cfg, c_cache, pe_cache, *, length):
     ctx_h = W_UV_h^T (sum_t p_t c_t)
     """
     B = x.shape[0]
-    H = cfg.n_heads
     d_nope, d_rope, d_v = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
     positions = jnp.full((B, 1), length, jnp.int32)
     q_nope, q_pe = _queries(p, x, cfg, positions)  # (B,1,H,*)

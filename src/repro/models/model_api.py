@@ -5,8 +5,6 @@ One class serves the whole zoo; behaviour is driven entirely by ModelConfig.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp

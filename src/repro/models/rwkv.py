@@ -132,7 +132,8 @@ def _chunked_time_mix(rh, kh, vh, wh, u, s0, Q):
     wall, EXPERIMENTS.md §Perf)."""
     B, S, H, dk = rh.shape
     C = S // Q
-    resh = lambda a: jnp.moveaxis(a.reshape(B, C, Q, H, dk), 1, 0)
+    def resh(a):
+        return jnp.moveaxis(a.reshape(B, C, Q, H, dk), 1, 0)
     rc, kc, vc, wc = resh(rh), resh(kh), resh(vh), resh(wh)
 
     def chunk(S_c, inp):

@@ -19,15 +19,12 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.common.pytree import ParamDef, abstract, materialize, specs_of
-from repro.common.sharding import MeshRules
+from repro.common.pytree import ParamDef
 from repro.models import layers as L
 from repro.models import mla as MLA
 from repro.models import moe as MOE

@@ -12,8 +12,6 @@ Implemented from scratch (no optax dependency):
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -121,8 +119,6 @@ def zero1_spec(pspec: P, shape: tuple[int, ...], mesh, axis: str = "data") -> P:
 
 def opt_state_specs(param_specs, param_defs, mesh, zero1: bool = True,
                     keep_master: bool = True):
-    from repro.common.pytree import ParamDef
-
     def spec_of(ps, pd):
         if not zero1:
             return ps

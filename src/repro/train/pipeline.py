@@ -15,7 +15,6 @@ Returns the stacked outputs of the LAST stage, in microbatch order.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

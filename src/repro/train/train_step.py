@@ -1,8 +1,6 @@
 """jit-able train step: loss + grad (+accumulation) + AdamW + metrics."""
 from __future__ import annotations
 
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -1,27 +1,39 @@
-"""Unit behaviour of each CC policy's defining mechanism (paper §II-D)."""
+"""Unit behaviour of each CC policy's defining mechanism (paper §II-D),
+plus Policy-API-v2 invariants: ParamSpec tables, typed Signals/FlowCtx,
+and randomized property tests over the whole registry."""
+import dataclasses
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hyp import given, settings, st
 
-from repro.core.cc import (ALL_POLICIES, get_policy, make_dcqcn, make_dctcp,
-                           make_hpcc, make_static_window, make_timely)
+from repro.core.cc import (ALL_POLICIES, FlowCtx, ParamSpec,
+                           Signals, get_policy, make_dcqcn, make_dctcp,
+                           make_hpcc, make_static_window, make_timely,
+                           policy_table_markdown, stack_policies)
 
 LINE = 25e9
 F = 4
 
 
-def _sig(t=0.0, ecn=0.0, rtt=2e-6, util=0.1):
-    return {"ecn": jnp.full((F,), ecn, jnp.float32),
-            "rtt": jnp.full((F,), rtt, jnp.float32),
-            "util": jnp.full((F,), util, jnp.float32),
-            "t": jnp.asarray(t, jnp.float32), "dt": 1e-6,
-            "line": jnp.full((F,), LINE, jnp.float32),
-            "base_rtt": jnp.full((F,), 2e-6, jnp.float32)}
+def _sig(t=0.0, ecn=0.0, rtt=2e-6, util=0.1, F=F):
+    return Signals(ecn=jnp.full((F,), ecn, jnp.float32),
+                   rtt=jnp.full((F,), rtt, jnp.float32),
+                   util=jnp.full((F,), util, jnp.float32),
+                   t=jnp.asarray(t, jnp.float32), dt=jnp.float32(1e-6),
+                   line=jnp.full((F,), LINE, jnp.float32),
+                   base_rtt=jnp.full((F,), 2e-6, jnp.float32))
 
 
-def _init(pol):
+def _ctx(F=F):
     line = jnp.full((F,), LINE, jnp.float32)
-    return pol.init(F, line, line * 2e-6)
+    return FlowCtx.make(line, line * 2e-6)
+
+
+def _init(pol, F=F):
+    return pol.init(_ctx(F))
 
 
 def test_pfc_only_always_line_rate():
@@ -39,7 +51,6 @@ def test_dcqcn_cuts_on_cnp_and_recovers():
     cut_rate = np.asarray(rate)
     assert np.all(cut_rate < LINE)  # multiplicative decrease
     # no marks for a long time -> recovery toward line rate
-    r = cut_rate
     for i in range(200):
         st, rate, _ = pol.update(pol.params, st, _sig(t=1e-4 + (i + 1) * 55e-6))
     assert np.all(np.asarray(rate) > cut_rate * 1.5)
@@ -112,7 +123,7 @@ def test_static_window_fanin_shares_port_budget():
     pol = make_static_window(margin=2.0, headroom=1e6)
     line = jnp.full((F,), LINE, jnp.float32)
     fanin = jnp.asarray([1.0, 7.0, 56.0, 1.0], jnp.float32)
-    st = pol.init(F, line, line * 2e-6, fanin=fanin)
+    st = pol.init(FlowCtx.make(line, line * 2e-6, fanin=fanin))
     w = np.asarray(st["w"])
     # aggregate in-flight at a port stays ~bounded regardless of fan-in
     np.testing.assert_allclose(w[1] * 7, w[0], rtol=1e-5)
@@ -131,3 +142,142 @@ def test_all_policies_rates_bounded(name):
         assert np.all(r <= LINE * 1.0001), name
         assert np.all(r > 0), name
         assert np.all(np.isfinite(np.asarray(win))), name
+
+
+# ---------------------------------------------------------------------------
+# ParamSpec tables
+# ---------------------------------------------------------------------------
+
+def test_param_specs_declare_defaults_and_bounds():
+    for name in ALL_POLICIES:
+        pol = get_policy(name)
+        for k, s in pol.spec.items():
+            assert isinstance(s, ParamSpec), (name, k)
+            assert s.scale in ("linear", "log")
+            if s.bounded:
+                assert s.lo <= s.default <= s.hi, (name, k)
+        # the params dict is derived from the spec
+        assert pol.params == {k: s.default for k, s in pol.spec.items()}
+
+
+def test_factory_overrides_land_in_spec_defaults():
+    pol = make_dcqcn(rai_frac=0.07, fast_rounds=3)
+    assert pol.spec["rai_frac"].default == pytest.approx(0.07)
+    assert pol.spec["fast_rounds"].default == 3
+    # metadata (bounds/scale/integer) is static per policy
+    assert pol.spec["rai_frac"].scale == "log"
+    assert pol.spec["fast_rounds"].integer
+
+
+def test_integer_params_declared():
+    assert get_policy("dcqcn").spec["fast_rounds"].integer
+    assert get_policy("dcqcn").spec["hai_after"].integer
+    assert get_policy("hpcc").spec["max_stage"].integer
+    assert get_policy("timely").spec["hai_thresh"].integer
+
+
+def test_init_baked_params_rejected_by_check_tunable():
+    pol = get_policy("static_window")
+    assert set(pol.init_params) == {"margin", "headroom", "min_w"}
+    with pytest.raises(ValueError, match="consumed by init"):
+        pol.check_tunable(["margin"])
+    with pytest.raises(ValueError, match="unknown"):
+        pol.check_tunable(["nope"])
+    with pytest.raises(KeyError, match="unknown static_window param"):
+        pol.param_spec("nope")
+
+
+def test_param_spec_validation():
+    with pytest.raises(ValueError, match="positive lo"):
+        ParamSpec(1.0, lo=0.0, hi=2.0, scale="log")
+    with pytest.raises(ValueError, match="scale"):
+        ParamSpec(1.0, scale="cubic")
+    s = ParamSpec(1.0, lo=0.5, hi=2.0)
+    assert s.clip(10.0) == 2.0 and s.clip(0.1) == 0.5
+
+
+def test_policy_table_markdown_lists_registry():
+    table = policy_table_markdown()
+    for name in ALL_POLICIES:
+        assert f"| `{name}` |" in table
+    assert "`rai_frac`" in table and "init-baked" in table
+
+
+# ---------------------------------------------------------------------------
+# randomized policy invariants (satellite: scan/vmap-safe state, bounded
+# outputs).  The hypothesis variant auto-skips when hypothesis is missing;
+# the numpy-seeded variant always runs.
+# ---------------------------------------------------------------------------
+
+def _rand_sig(rng, F, t):
+    return Signals(
+        ecn=jnp.asarray(rng.uniform(0, 1, F), jnp.float32),
+        rtt=jnp.asarray(rng.uniform(1e-7, 1e-2, F), jnp.float32),
+        util=jnp.asarray(rng.uniform(1e-3, 10.0, F), jnp.float32),
+        t=jnp.asarray(t, jnp.float32), dt=jnp.float32(1e-6),
+        line=jnp.full((F,), LINE, jnp.float32),
+        base_rtt=jnp.full((F,), 2e-6, jnp.float32))
+
+
+def _tree_sig(state):
+    return jax.tree_util.tree_structure(state), \
+        [(x.shape, x.dtype) for x in jax.tree_util.tree_leaves(state)]
+
+
+def _check_policy_invariants(pol, seed, n_steps=25):
+    rng = np.random.default_rng(seed)
+    st = _init(pol)
+    sig0 = _tree_sig(st)
+    for i in range(n_steps):
+        st, rate, win = pol.update(pol.params, st,
+                                   _rand_sig(rng, F, t=(i + 1) * 13e-6))
+        r, w = np.asarray(rate), np.asarray(win)
+        assert r.shape == (F,) and w.shape == (F,), pol.name
+        assert np.all(r > 0), pol.name
+        assert np.all(r <= LINE * 1.0001), pol.name
+        assert np.all(w > 0), pol.name
+        # scan/vmap safety: stable pytree structure, shapes and dtypes
+        assert _tree_sig(st) == sig0, pol.name
+
+
+@pytest.mark.parametrize("name", ALL_POLICIES)
+def test_policy_invariants_randomized(name):
+    _check_policy_invariants(get_policy(name), seed=42)
+
+
+def test_stacked_policy_invariants_randomized():
+    _check_policy_invariants(stack_policies(["dcqcn", "hpcc", "timely"]),
+                             seed=7)
+
+
+@given(st.sampled_from(ALL_POLICIES), st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_policy_invariants_property(name, seed):
+    _check_policy_invariants(get_policy(name), seed=seed, n_steps=8)
+
+
+# ---------------------------------------------------------------------------
+# typed structs
+# ---------------------------------------------------------------------------
+
+def test_signals_is_a_pytree():
+    sig = _sig(t=1e-4, ecn=0.3)
+    leaves = jax.tree_util.tree_leaves(sig)
+    assert len(leaves) == 7
+    doubled = jax.tree_util.tree_map(lambda x: x * 2, sig)
+    np.testing.assert_allclose(np.asarray(doubled.ecn),
+                               2 * np.asarray(sig.ecn))
+    rep = sig.replace(base_rtt=sig.base_rtt * 2)
+    np.testing.assert_allclose(np.asarray(rep.base_rtt),
+                               2 * np.asarray(sig.base_rtt))
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        sig.ecn = sig.rtt
+
+
+def test_flowctx_make_defaults_fanin():
+    ctx = _ctx()
+    assert ctx.n_flows == F
+    np.testing.assert_array_equal(np.asarray(ctx.fanin), np.ones(F))
+    # pytree with static n_flows
+    mapped = jax.tree_util.tree_map(lambda x: x, ctx)
+    assert mapped.n_flows == F

@@ -4,7 +4,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.ckpt import (AsyncCheckpointer, gc_old, latest_step,
                                    restore, save)

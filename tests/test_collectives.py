@@ -79,9 +79,9 @@ def test_ecmp_spreads_spine_choice():
     spine_links = set(topo.meta["tor_up"].flatten().tolist())
     used = {}
     for f in range(sched.n_flows):
-        for l in sched.path[f]:
-            if int(l) in spine_links:
-                used[int(l)] = used.get(int(l), 0) + 1
+        for lk in sched.path[f]:
+            if int(lk) in spine_links:
+                used[int(lk)] = used.get(int(lk), 0) + 1
     # every TOR->spine uplink should carry some flows (ECMP balance)
     assert len(used) == len(spine_links)
     counts = np.asarray(list(used.values()))
@@ -115,9 +115,9 @@ def test_route_uses_every_spine_for_cross_rack():
         for dst in range(8, 16):       # rack 1
             for salt in range(4):
                 key = (src * 131071 + dst * 8191 + salt * 524287) & 0x7FFFFFFF
-                for l in route(topo, src, dst, key):
-                    if l in spine_links:
-                        hit.add(l)
+                for lk in route(topo, src, dst, key):
+                    if lk in spine_links:
+                        hit.add(lk)
     # rack-0 ToR has 8 uplinks; cross-rack flows must reach all of them
     assert len(hit) == 8
 

@@ -1,6 +1,5 @@
 """Flash-attention custom VJP vs dense reference (fwd + grads)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 from _hyp import given, settings, st
 
-from repro.core.cc import make_dcqcn
+from repro.core.cc import FlowCtx, Signals, make_dcqcn
 from repro.kernels.cc_update.ops import dcqcn_update
 from repro.kernels.embedding_bag.ops import embedding_bag_stacked
 from repro.kernels.embedding_bag.ref import embedding_bag_stacked_ref
@@ -77,14 +77,14 @@ def test_flash_decode_property(B, S, cut):
 def test_cc_update_matches_policy(F, key):
     pol = make_dcqcn()
     line = jnp.full((F,), 25e9, jnp.float32)
-    st_ = pol.init(F, line, line * 2e-6)
+    st_ = pol.init(FlowCtx.make(line, line * 2e-6))
     st_ = dict(st_, rc=st_["rc"] * jax.random.uniform(key, (F,), minval=0.05, maxval=1.0),
                alpha=jax.random.uniform(key, (F,), minval=0.1, maxval=1.0))
     ecn = jax.random.uniform(jax.random.PRNGKey(9), (F,), maxval=0.4)
     got = dcqcn_update(st_, ecn, line, 2e-3, pol.params)
-    sig = {"ecn": ecn, "rtt": jnp.zeros(F), "util": jnp.zeros(F),
-           "t": jnp.asarray(2e-3, jnp.float32), "dt": 1e-6, "line": line,
-           "base_rtt": jnp.zeros(F)}
+    sig = Signals(ecn=ecn, rtt=jnp.zeros(F), util=jnp.zeros(F),
+                  t=jnp.asarray(2e-3, jnp.float32), dt=jnp.float32(1e-6),
+                  line=line, base_rtt=jnp.zeros(F))
     want, _, _ = pol.update(pol.params, st_, sig)
     for k in ("rc", "rt", "alpha", "t_cut", "t_inc", "t_alpha", "inc_count"):
         np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),

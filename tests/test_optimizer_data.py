@@ -1,5 +1,4 @@
 """Optimizer math, ZeRO-1 specs, data determinism, prefetcher."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -7,7 +6,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import TrainConfig
 from repro.data.pipeline import Prefetcher, dlrm_batch, lm_batch
-from repro.train.optimizer import (adamw_update, global_norm, init_opt_state,
+from repro.train.optimizer import (adamw_update, init_opt_state,
                                    lr_schedule, zero1_spec)
 
 

@@ -1,6 +1,5 @@
 """The reproduction gate: the paper's findings F1-F6 (DESIGN.md §1) at
 test-sized scale.  Heavier full-scale runs live in benchmarks/."""
-import numpy as np
 import pytest
 
 from repro.core.cc import get_policy

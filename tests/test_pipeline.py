@@ -1,6 +1,5 @@
 """GPipe stage-parallel primitive vs sequential reference (4 forced
 host devices in a subprocess)."""
-import json
 import os
 import subprocess
 import sys

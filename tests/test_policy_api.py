@@ -1,0 +1,334 @@
+"""Policy API v2: the batched policy axis, spec-driven grids, and
+bounds-aware autotuning.
+
+Acceptance gates (ISSUE 4):
+* a policy x CC-param x fabric grid over >= 3 policies runs with ZERO
+  recompiles after a same-shaped warmup (``sweep.compile_stats``);
+* every lane of a stacked policy-axis dispatch matches the member
+  policy's serial run at the golden tolerances.
+"""
+import numpy as np
+import pytest
+
+from repro.core.autotune import autotune
+from repro.core.cc import (ALL_POLICIES, get_policy, stack_labels,
+                           stack_policies)
+from repro.core.collectives import incast
+from repro.core.engine import EngineConfig, FabricParams
+from repro.core.scenario import (CollectiveSpec, FabricSpec, IncastSpec,
+                                 ScenarioSpec, scenario_matrix)
+from repro.core.sweep import SweepRunner, compile_stats, grid_from_spec
+from repro.core.topology import single_switch
+
+CFG = EngineConfig(dt=1e-6, max_steps=1500, max_extends=2, queue_stride=0)
+
+
+def _tiny_case():
+    topo = single_switch(8)
+    sched = incast(topo, list(range(1, 8)), 0, 3e6)
+    return topo, sched
+
+
+# ---------------------------------------------------------------------------
+# stack_policies
+# ---------------------------------------------------------------------------
+
+def test_stack_policies_namespace_and_defaults():
+    stacked = stack_policies(["dcqcn", "hpcc"])
+    assert stacked.members == ("dcqcn", "hpcc")
+    assert stacked.spec["_which"].integer
+    assert "dcqcn.rai_frac" in stacked.spec
+    assert "hpcc.eta" in stacked.spec
+    assert stacked.params["_wire"] == pytest.approx(1.0)  # member 0 = dcqcn
+    with pytest.raises(ValueError, match="at least two"):
+        stack_policies(["dcqcn"])
+
+
+def test_stack_labels_deduplicate():
+    assert stack_labels(["dcqcn", "dcqcn", "hpcc"]) == \
+        ["dcqcn0", "dcqcn1", "hpcc"]
+
+
+def test_run_policy_axis_matches_serial_all_policies():
+    """Every registered policy, one vmapped dispatch, vs its serial run —
+    the PR-3 physics must reproduce lane by lane (incl. HPCC's wire
+    factor and static_window's fanin-aware init)."""
+    topo, sched = _tiny_case()
+    runner = SweepRunner(CFG)
+    batch = runner.run_policy_axis(topo, sched, ALL_POLICIES)
+    assert batch.n == len(ALL_POLICIES)
+    assert batch.policy_axis == ALL_POLICIES
+    for i, pol in enumerate(ALL_POLICIES):
+        serial = runner.run(topo, sched, pol)
+        assert batch.policy_of(i) == pol
+        assert bool(batch.finished[i]) == serial.finished
+        np.testing.assert_allclose(batch.t_finish[i], serial.t_finish,
+                                   rtol=1e-5)
+        np.testing.assert_allclose(batch.pause_count[i], serial.pause_count,
+                                   rtol=1e-3, atol=1.0)
+        np.testing.assert_allclose(batch.delivered[i].sum(),
+                                   serial.delivered.sum(), rtol=1e-4)
+
+
+def test_run_policy_axis_cc_overrides_per_member():
+    topo, sched = _tiny_case()
+    runner = SweepRunner(CFG)
+    over = [None, {"rai_frac": 0.2}]
+    batch = runner.run_policy_axis(topo, sched, ["pfc", "dcqcn"],
+                                   cc_overrides=over)
+    serial = runner.run(topo, sched, "dcqcn",
+                        cc_params=dict(get_policy("dcqcn").params,
+                                       rai_frac=0.2))
+    np.testing.assert_allclose(batch.t_finish[1], serial.t_finish, rtol=1e-5)
+    with pytest.raises(ValueError, match="cc_overrides has"):
+        runner.run_policy_axis(topo, sched, ["pfc", "dcqcn"],
+                               cc_overrides=[{}])
+    with pytest.raises(ValueError, match="unknown dcqcn"):
+        runner.run_policy_axis(topo, sched, ["pfc", "dcqcn"],
+                               cc_overrides=[None, {"bogus": 1.0}])
+
+
+# ---------------------------------------------------------------------------
+# acceptance gate: policy x param x fabric grid, zero recompiles
+# ---------------------------------------------------------------------------
+
+def test_policy_param_fabric_grid_zero_recompiles():
+    """3 policies x 2 CC points x 2 fabric points = one 12-lane dispatch;
+    after a same-shaped warmup the sweep adds ZERO compiled executables."""
+    topo, sched = _tiny_case()
+    runner = SweepRunner(CFG)
+    axis = ["dcqcn", "dctcp", "hpcc"]
+
+    def sweep(scale):
+        return runner.grid(topo, sched,
+                           param_grid={"dcqcn.rai_frac": [0.01 * scale,
+                                                          0.05 * scale]},
+                           fabric_grid={"xoff": [0.5e6 * scale, 1e6 * scale]},
+                           policy_axis=axis)
+
+    sweep(1.1)                       # warmup: same shapes, other values
+    s0 = compile_stats()
+    batch = sweep(1.0)
+    assert compile_stats() == s0, "policy-axis grid recompiled after warmup"
+    assert batch.n == 12
+    assert batch.finished.all()
+    assert {batch.policy_of(i) for i in range(batch.n)} == set(axis)
+    # lanes must match serial per-member runs (spot-check every lane)
+    which = batch.params["_which"].astype(int)
+    for i in range(batch.n):
+        pol = get_policy(axis[which[i]])
+        cc = dict(pol.params)
+        if axis[which[i]] == "dcqcn":
+            cc["rai_frac"] = float(batch.params["dcqcn.rai_frac"][i])
+        serial = runner.run(topo, sched, pol, cc_params=cc,
+                            fabric_params=batch.fabric_set(i))
+        np.testing.assert_allclose(batch.t_finish[i], serial.t_finish,
+                                   rtol=1e-5)
+
+
+def test_grid_policy_axis_validation():
+    topo, sched = _tiny_case()
+    runner = SweepRunner(CFG)
+    with pytest.raises(ValueError, match="not both"):
+        runner.grid(topo, sched, "dcqcn", {"rai_frac": [0.01]},
+                    policy_axis=["dcqcn", "hpcc"])
+    with pytest.raises(ValueError, match="member-namespaced"):
+        runner.grid(topo, sched, param_grid={"rai_frac": [0.01, 0.05]},
+                    policy_axis=["dcqcn", "hpcc"])
+    with pytest.raises(ValueError, match="policy is required"):
+        runner.grid(topo, sched, param_grid={"rai_frac": [0.01]})
+
+
+def test_grid_spec_with_policy_tuple():
+    spec = ScenarioSpec(
+        fabric=FabricSpec(family="single", n_racks=1, nodes_per_rack=1,
+                          gpus_per_node=8),
+        workload=IncastSpec(n_senders=7, size_each=2e6),
+        policy=("pfc", "dcqcn", "hpcc"))
+    runner = SweepRunner(CFG)
+    batch = runner.grid_spec(spec, fabric_grid={"xoff": [0.5e6, 2e6]})
+    assert batch.n == 6
+    assert batch.policy_axis == ("pfc", "dcqcn", "hpcc")
+    assert batch.finished.all()
+
+
+def test_run_spec_rejects_policy_axis_spec():
+    spec = ScenarioSpec(
+        fabric=FabricSpec(family="single", n_racks=1, nodes_per_rack=1,
+                          gpus_per_node=4),
+        workload=IncastSpec(n_senders=3, size_each=1e6),
+        policy=("pfc", "dcqcn"))
+    with pytest.raises(ValueError, match="policy axis"):
+        SweepRunner(CFG).run_spec(spec)
+
+
+def test_scenario_matrix_stacked():
+    specs = scenario_matrix(
+        FabricSpec(family="single", n_racks=1, nodes_per_rack=1,
+                   gpus_per_node=8),
+        [CollectiveSpec("1d", 2e6, n_chunks=2)],
+        ["pfc", "dcqcn"], stacked=True)
+    assert len(specs) == 1
+    assert specs[0].policy == ("pfc", "dcqcn")
+    assert specs[0].name.endswith("_stack")
+    _, _, pol = specs[0].build()
+    assert pol.members == ("pfc", "dcqcn")
+
+
+# ---------------------------------------------------------------------------
+# spec-driven grid axes
+# ---------------------------------------------------------------------------
+
+def test_grid_from_spec_scales_and_integers():
+    axes = grid_from_spec("dcqcn", 3, ["rai_frac", "fast_rounds"])
+    np.testing.assert_allclose(axes["rai_frac"],
+                               np.geomspace(1e-4, 0.5, 3))     # log scale
+    assert axes["fast_rounds"] == [0.0, 10.0, 20.0]            # int-rounded
+    axes = grid_from_spec("hpcc", 3, ["eta"])
+    np.testing.assert_allclose(axes["eta"], [0.5, 0.75, 1.0])  # linear
+    # default key set: every bounded tunable
+    assert set(grid_from_spec("dctcp")) == {"g", "mss", "ecn_thresh",
+                                            "wmax_bdp"}
+    with pytest.raises(ValueError, match="unknown"):
+        grid_from_spec("dcqcn", 3, ["nope"])
+    with pytest.raises(ValueError, match="consumed by init"):
+        grid_from_spec("static_window", 3, ["margin"])
+
+
+def test_grid_from_spec_feeds_grid():
+    topo, sched = _tiny_case()
+    runner = SweepRunner(CFG)
+    batch = runner.grid(topo, sched, "dctcp",
+                        grid_from_spec("dctcp", 2, ["g", "wmax_bdp"]))
+    assert batch.n == 4
+    assert batch.finished.all()
+
+
+# ---------------------------------------------------------------------------
+# autotune: integer rejection + bounds projection
+# ---------------------------------------------------------------------------
+
+def test_autotune_rejects_integer_params():
+    topo, sched = _tiny_case()
+    with pytest.raises(ValueError, match="integer-valued"):
+        autotune(topo, sched, get_policy("dcqcn"), ["fast_rounds"],
+                 steps=1, cfg=CFG)
+    with pytest.raises(ValueError, match="integer-valued"):
+        autotune(topo, sched, get_policy("hpcc"), ["max_stage"],
+                 steps=1, cfg=CFG)
+
+
+def test_autotune_projects_onto_bounds():
+    """An absurd learning rate slams the tuned param into its declared
+    bounds: every reported value stays in range and the projection is
+    recorded in the history."""
+    topo, sched = _tiny_case()
+    cfg = EngineConfig(dt=2e-6, max_steps=400, max_extends=0, queue_stride=0)
+    pol = get_policy("dcqcn")
+    res = autotune(topo, sched, pol, ["rai_frac"], steps=3, lr=5e5,
+                   cfg=cfg)
+    s = pol.param_spec("rai_frac")
+    for h in res.history:
+        assert s.lo <= h["rai_frac"] <= s.hi
+        assert isinstance(h["projected"], list)
+    clamped = [h for h in res.history if "rai_frac" in h["projected"]]
+    assert clamped, "no projection recorded despite the absurd step size"
+    for h in clamped:                # a recorded projection sits at a bound
+        assert h["rai_frac"] in (pytest.approx(s.lo), pytest.approx(s.hi))
+    assert s.lo <= res.params["rai_frac"] <= s.hi
+
+
+def test_autotune_linear_scale_param():
+    """Linear-scale specs (TIMELY beta, HPCC eta) descend in value space
+    and stay inside their declared [lo, hi]."""
+    topo, sched = _tiny_case()
+    cfg = EngineConfig(dt=2e-6, max_steps=300, max_extends=0, queue_stride=0)
+    pol = get_policy("hpcc")
+    res = autotune(topo, sched, pol, ["eta"], steps=2, lr=0.5, cfg=cfg,
+                   population=3)
+    s = pol.param_spec("eta")
+    for h in res.history:
+        assert s.lo <= h["eta"] <= s.hi
+    assert res.tuned_cost <= res.baseline_cost + 1e-6
+
+
+def test_autotune_fabric_keys_use_fabric_specs():
+    from repro.core.engine import FABRIC_PARAM_SPECS
+    topo, sched = _tiny_case()
+    cfg = EngineConfig(dt=2e-6, max_steps=300, max_extends=0, queue_stride=0)
+    res = autotune(topo, sched, get_policy("dcqcn"), [],
+                   fabric_keys=["kmin"], steps=2, lr=50.0, cfg=cfg)
+    s = FABRIC_PARAM_SPECS["kmin"]
+    assert res.fabric is not None
+    k = float(np.asarray(res.fabric.kmin))
+    assert s.lo <= k <= s.hi
+    for h in res.history:
+        assert s.lo <= h["fabric.kmin"] <= s.hi
+
+
+# ---------------------------------------------------------------------------
+# serial simulation of a stacked policy (no vmap): _which selects members
+# ---------------------------------------------------------------------------
+
+def test_stacked_policy_serial_run_selects_member():
+    topo, sched = _tiny_case()
+    runner = SweepRunner(CFG)
+    stacked = stack_policies(["pfc", "dcqcn"])
+    r_pfc = runner.run(topo, sched, "pfc")
+    r_dcqcn = runner.run(topo, sched, "dcqcn")
+    params0 = dict(stacked.params, _which=0.0, _wire=1.0)
+    params1 = dict(stacked.params, _which=1.0, _wire=1.0)
+    s0 = runner.run(topo, sched, stacked, cc_params=params0)
+    s1 = runner.run(topo, sched, stacked, cc_params=params1)
+    np.testing.assert_allclose(s0.t_finish, r_pfc.t_finish, rtol=1e-5)
+    np.testing.assert_allclose(s1.t_finish, r_dcqcn.t_finish, rtol=1e-5)
+    assert s0.completion_time != s1.completion_time
+
+
+def test_batch_pays_off_heuristics():
+    """CPU: same-policy param sweeps batch below the measured flow
+    crossover; the stacked policy axis (switch runs every branch under
+    vmap) batches only off-CPU (BENCH_engine.json policy_axis)."""
+    import jax
+    topo, sched = _tiny_case()
+    runner = SweepRunner(CFG)
+    if jax.default_backend() == "cpu":
+        assert runner.batch_pays_off(sched)          # 7 flows
+        big = type("S", (), {"n_flows": SweepRunner.CPU_BATCH_FLOWS + 1})()
+        assert not runner.batch_pays_off(big)
+        assert not runner.policy_axis_pays_off()
+    else:
+        assert runner.batch_pays_off(sched)
+        assert runner.policy_axis_pays_off()
+
+
+def test_readme_policy_table_in_sync():
+    """The README policy table is generated from the registry — drift
+    fails here (regenerate: PYTHONPATH=src python
+    scripts/gen_policy_table.py)."""
+    import os
+
+    from repro.core.cc import policy_table_markdown
+    path = os.path.join(os.path.dirname(__file__), "..", "README.md")
+    with open(path) as f:
+        text = f.read()
+    start = "<!-- POLICY_TABLE_START"
+    end = "<!-- POLICY_TABLE_END -->"
+    assert start in text and end in text, "README lost the table markers"
+    block = text.split(start, 1)[1].split(end, 1)[0]
+    block = block.split("-->", 1)[1].strip()     # drop the marker tail
+    assert block == policy_table_markdown(), (
+        "README policy table is stale; run scripts/gen_policy_table.py")
+
+
+def test_fabric_params_still_sweep_with_policy_axis():
+    """Fabric leaves vary per lane alongside the policy selector."""
+    topo, sched = _tiny_case()
+    runner = SweepRunner(CFG)
+    batch = runner.run_policy_axis(
+        topo, sched, ["pfc", "dcqcn"],
+        stacked_fabric={"xoff": np.asarray([0.2e6, 1e6], np.float32)})
+    serial = runner.run(topo, sched, "pfc",
+                        fabric_params=FabricParams(xoff=0.2e6))
+    np.testing.assert_allclose(batch.pause_count[0], serial.pause_count,
+                               rtol=1e-3, atol=1.0)

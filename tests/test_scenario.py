@@ -18,8 +18,7 @@ from repro.core.engine import EngineConfig, FabricParams, Simulator, simulate
 from repro.core.scenario import (TOPOLOGIES, CollectiveSpec, FabricSpec,
                                  IncastSpec, ScenarioSpec, scenario_matrix)
 from repro.core.sweep import SweepRunner, compile_stats
-from repro.core.topology import (LINK_CLASSES, N_LINK_CLASSES, clos,
-                                 single_switch)
+from repro.core.topology import LINK_CLASSES, N_LINK_CLASSES, single_switch
 
 GOLD = json.load(open(os.path.join(os.path.dirname(__file__), "golden",
                                    "engine_seed.json")))

@@ -86,8 +86,9 @@ def test_mini_dryrun_8_devices(tmp_path):
         defs = m.param_defs()
         p_abs = abstract(defs)
         specs = m.param_specs()
-        shard = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
-                                       is_leaf=lambda x: isinstance(x, P))
+        def shard(t):
+            return jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                is_leaf=lambda x: isinstance(x, P))
         o_abs = jax.eval_shape(lambda p: init_opt_state(p, keep_master=False), p_abs)
         o_specs = opt_state_specs(specs, defs, mesh, keep_master=False)
         tcfg = TrainConfig(microbatch=4)

@@ -3,7 +3,6 @@ autotune, prediction bridge."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import smoke_model
 from repro.configs.base import TrainConfig
