@@ -194,6 +194,53 @@ def bench_policy_axis(policies=("pfc", "dcqcn", "dctcp", "timely", "hpcc")) -> d
     }
 
 
+def bench_faults() -> dict:
+    """Fault-scenario smoke: one lossy-RoCE run (loss + IRN recovery, PFC
+    off) and one link-flap run on the 8-GPU incast, plus the per-lane
+    health fields — exercises the faulty compile path end to end in CI."""
+    import warnings
+
+    import numpy as np
+
+    from repro.core.faults import FaultSpec
+
+    topo = single_switch(8)
+    sched = incast(topo, list(range(1, 8)), 0, 5e6)
+    cfg = EngineConfig(dt=1e-6, max_steps=1500, max_extends=3,
+                       queue_stride=0)
+    sim = Simulator(topo, sched, get_policy("dcqcn"), cfg)
+    out = {}
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        base = sim.run()
+        t0 = time.time()
+        lossy = sim.run(fault_spec=FaultSpec.lossy_roce(1e-4, "irn"))
+        lossy_s = time.time() - t0
+        t0 = time.time()
+        flappy = sim.run(fault_spec=FaultSpec(flap_period=200e-6,
+                                              flap_down=100e-6))
+        flap_s = time.time() - t0
+    out["lossless_completion_ms"] = round(base.completion_time * 1e3, 4)
+    out["lossy"] = {
+        "spec": "loss_rate=1e-4 irn pfc_off",
+        "wall_s": round(lossy_s, 3),
+        "completion_ms": round(lossy.completion_time * 1e3, 4),
+        "lost_kb": round(float(np.sum(lossy.lost)) / 1e3, 2),
+        "finished": lossy.finished,
+        "pause_frames": int(lossy.pause_count.sum()),   # 0: PFC disabled
+    }
+    out["flap"] = {
+        "spec": "flap_period=200us flap_down=100us",
+        "wall_s": round(flap_s, 3),
+        "completion_ms": round(flappy.completion_time * 1e3, 4),
+        "finished": flappy.finished,
+    }
+    for tag in ("lossy", "flap"):
+        assert out[tag]["finished"], f"fault smoke {tag!r} did not finish"
+    assert out["lossy"]["completion_ms"] > out["lossless_completion_ms"]
+    return out
+
+
 def bench_figures() -> dict:
     """Warm wall time of small-scale versions of the figure scenarios."""
     out = {}
@@ -246,6 +293,7 @@ def main():
     report["headline"] = bench_headline(reps=1 if args.smoke else 3)
     report["speedup_vs_seed"] = round(
         args.seed_warm_s / report["headline"]["warm_s"], 1)
+    report["faults"] = bench_faults()
     if not args.smoke:
         report["sweep_vmap"] = bench_sweep()
         report["policy_axis"] = bench_policy_axis()

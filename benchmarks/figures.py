@@ -108,9 +108,14 @@ def fig8_completion():
         pols = (("pfc", "dcqcn", "hpcc") if "ring" in kind else ALL_POLICIES)
         for pol in pols:
             r = run_cached(_ar_tag(name), ScenarioSpec(fab, wl, pol), cfg)
-            rows.append(("fig8", f"{name}_completion_ms", pol,
-                         round(r.completion_time * 1e3, 4)))
-            if not r.finished:
+            # an exhausted step budget means completion is a lower bound,
+            # not a measurement: mark the cell NaN + an explicit flag row
+            ct = (float("nan") if r.extend_exhausted
+                  else round(r.completion_time * 1e3, 4))
+            rows.append(("fig8", f"{name}_completion_ms", pol, ct))
+            if r.extend_exhausted:
+                rows.append(("fig8", f"{name}_EXHAUSTED", pol, 1))
+            elif not r.finished:
                 rows.append(("fig8", f"{name}_UNFINISHED", pol, 1))
     return rows
 
@@ -228,4 +233,70 @@ def fig12_fabric_sweep():
             "pfc_frames": [float(v) for v in batch.pause_count.sum(axis=1)],
         }
     save_json("fig12_fabric_sweep.json", series)
+    return rows
+
+
+def fig13_fault_regimes():
+    """Beyond-paper (Mittal/Hoefler direction): CC policies on a *faulty*
+    fabric.  Two sweeps, each ONE vmapped dispatch over a stacked policy
+    axis: (a) loss-rate x recovery-model (IRN vs go-back-N) on a lossy
+    CLOS All-Reduce, (b) link-flap frequency.  A lane whose step budget
+    ran out reports completion as NaN plus an ``_EXHAUSTED`` marker row —
+    its comm time is a lower bound, not a measurement — and deadlocked /
+    diverged lanes get their own marker rows (``BatchResults.lane_status``).
+    """
+    import warnings
+
+    from repro.core.faults import FaultSpec
+
+    fab = paper_fabric()
+    wl = CollectiveSpec("1d", collective_size() / 2)
+    cfg = engine_cfg(queue_stride=0)
+    pols = ("dcqcn", "hpcc", "timely")
+    spec = ScenarioSpec(fab, wl, pols,
+                        fault_spec=FaultSpec(pfc_on=0.0))  # lossy-RoCE mode
+    rows, series = [], {}
+
+    def lane_rows(batch, tag_of):
+        status = batch.lane_status()
+        for i in range(batch.n):
+            pol, tag = batch.policy_of(i), tag_of(i)
+            if batch.extend_exhausted[i]:
+                rows.append(("fig13", f"{tag}_completion_ms", pol,
+                             float("nan")))
+                rows.append(("fig13", f"{tag}_EXHAUSTED", pol, 1))
+            else:
+                rows.append(("fig13", f"{tag}_completion_ms", pol,
+                             round(float(batch.completion_time[i]) * 1e3, 4)))
+                if status[i] != "ok":
+                    rows.append(("fig13", f"{tag}_{status[i].upper()}",
+                                 pol, 1))
+        return status
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        lossy = RUNNER.grid_spec(spec, fault_grid={
+            "loss_rate": [0.0, 1e-5, 1e-3], "gbn": [0.0, 1.0]}, cfg=cfg)
+        flappy = RUNNER.grid_spec(spec, fault_grid={
+            "flap_period": [400e-6, 1600e-6], "flap_down": [100e-6]},
+            cfg=cfg)
+
+    def loss_tag(i):
+        rec = "gbn" if lossy.fault["gbn"][i] > 0.5 else "irn"
+        return f"loss{float(lossy.fault['loss_rate'][i]):g}_{rec}"
+
+    loss_status = lane_rows(lossy, loss_tag)
+    flap_status = lane_rows(
+        flappy, lambda i: f"flap{float(flappy.fault['flap_period'][i]):g}s")
+    for name, batch, status in (("loss_grid", lossy, loss_status),
+                                ("flap_grid", flappy, flap_status)):
+        series[name] = {
+            "policy": [batch.policy_of(i) for i in range(batch.n)],
+            "fault": {k: [float(x) for x in v]
+                      for k, v in batch.fault.items()},
+            "completion_ms": [float(v) * 1e3
+                              for v in batch.completion_time],
+            "lane_status": status,
+        }
+    save_json("fig13_fault_regimes.json", series)
     return rows

@@ -21,7 +21,8 @@ def main() -> None:
                figures.fig9_pfc_counts,
                figures.fig10_dlrm_e2e,
                figures.fig11_static_window,
-               figures.fig12_fabric_sweep):
+               figures.fig12_fabric_sweep,
+               figures.fig13_fault_regimes):
         t0 = time.time()
         try:
             emit(fn())

@@ -21,6 +21,11 @@ from repro.core.collectives import (  # noqa: F401
     incast,
     register_collective,
 )
+from repro.core.faults import (  # noqa: F401
+    FAULT_PARAM_SPECS,
+    RECOVERY_MODES,
+    FaultSpec,
+)
 from repro.core.engine import (  # noqa: F401
     FABRIC_PARAM_SPECS,
     EngineConfig,

@@ -172,11 +172,12 @@ def autotune(topo, sched, policy: Policy, tune_keys: list[str],
     baseline = None
     best, best_z = np.inf, None
 
-    def snapshot(i, c, projected):
+    def snapshot(i, c, projected, bad):
         j = int(np.argmin(c))
         hist.append({"step": i, "cost": float(c[j]),
                      "population_costs": [float(x) for x in c],
                      "projected": sorted(projected),
+                     "nonfinite_members": [int(m) for m in bad],
                      **{k: float(np.asarray(decode(k, jnp.asarray(v)))[j])
                         for k, v in zp.items()}})
         return j
@@ -185,19 +186,32 @@ def autotune(topo, sched, policy: Policy, tune_keys: list[str],
     for i in range(steps):
         c, g = vg(zp)
         c = np.asarray(c)
+        # non-finite guard: a NaN/inf cost or gradient (diverged lane,
+        # pathological params) must not corrupt the population step —
+        # freeze the offending member this step, never select it as best
+        m_ok = np.isfinite(c)
+        for k in g:
+            m_ok &= np.all(np.isfinite(np.asarray(g[k]))
+                           .reshape(P, -1), axis=1)
+        bad = np.flatnonzero(~m_ok)
+        c = np.where(m_ok, c, np.inf)
         if i == 0:
             baseline = float(c[0])
-        j = snapshot(i, c, projected_now)
+        j = snapshot(i, c, projected_now, bad)
         if c[j] < best:
             best = float(c[j])
             best_z = {k: float(np.asarray(v)[j]) for k, v in zp.items()}
-        # clipped-gradient step, every member in parallel, then projection
-        gn = {k: jnp.clip(g[k], -10, 10) for k in g}
+        # clipped-gradient step, every member in parallel, then projection;
+        # non-finite members take a zero step (their params stay put)
+        ok = jnp.asarray(m_ok)
+        gn = {k: jnp.where(ok, jnp.clip(g[k], -10, 10), 0.0) for k in g}
         zp = {k: zp[k] - lr * gn[k] for k in zp}
         zp, projected_now = project(zp)
     if best_z is None:                       # steps == 0: evaluate once
         c = np.asarray(vg(zp)[0])
-        j = snapshot(0, c, [])
+        bad = np.flatnonzero(~np.isfinite(c))
+        c = np.where(np.isfinite(c), c, np.inf)
+        j = snapshot(0, c, [], bad)
         baseline, best = float(c[0]), float(c[j])
         best_z = {k: float(np.asarray(v)[j]) for k, v in zp.items()}
 

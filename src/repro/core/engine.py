@@ -63,6 +63,7 @@ scenarios never retrace.  Declarative scenario construction
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -71,6 +72,7 @@ from jax import lax
 
 from repro.core.cc import FlowCtx, ParamSpec, Policy, Signals
 from repro.core.collectives import Schedule
+from repro.core.faults import FaultSpec, _as_fault, is_faulty
 from repro.core.topology import (LINK_CLASS_ID, MAXHOP, N_LINK_CLASSES,
                                  Topology)
 
@@ -98,6 +100,10 @@ class EngineConfig:
     # hot-path knobs (do not change simulated physics)
     chunk_steps: int = 256        # early-exit check granularity (in-jit)
     queue_stride: int = 1         # record dev_queue every k steps; 0 = off
+    # run-health detection (observers only; never change simulated physics)
+    deadlock_check_every: int = 64   # pause-cycle check cadence (steps)
+    storm_frac: float = 0.5          # pause storm: fraction of ports paused
+    storm_steps: int = 50            # ... for this many consecutive steps
 
 
 _FABRIC_DEFAULTS = dict(kmin=400e3, kmax=1600e3, pmax=0.2, xoff=1e6, xon=0.8e6)
@@ -201,6 +207,13 @@ class Results:
     delivered: np.ndarray
     soft_cost: float
     meta: dict
+    # run health (observers; see EngineConfig deadlock/storm knobs)
+    deadlocked: bool = False      # a PFC pause-graph cycle was detected
+    deadlock_step: int = -1       # first step the cycle was seen (-1 = never)
+    storm_step: int = -1          # first step a pause storm was sustained
+    diverged: bool = False        # non-finite state; lane frozen at detection
+    extend_exhausted: bool = False  # step budget ran out before completion
+    lost: np.ndarray | None = None  # (F,) bytes dropped in-network (lossy mode)
 
 
 # ---------------------------------------------------------------------------
@@ -346,6 +359,10 @@ def _prep(topo: Topology, sched: Schedule, cfg: EngineConfig,
     dev_sw_ext = np.concatenate([topo.dev_is_switch, [False]])
     fabric_ext = np.concatenate([topo.fabric, [False]])
     can_pause = dev_sw_ext[dst_dev] & fabric_ext
+    # pause-cycle (deadlock) wait-for graph support: only switch->switch
+    # fabric links can participate in a PFC cycle (hosts do not forward)
+    sw_sw = (topo.dev_is_switch[topo.src_dev]
+             & topo.dev_is_switch[topo.dst_dev] & topo.fabric)
 
     # static fan-in: CONCURRENT flows sharing each flow's most-contended
     # link.  Deterministic schedules serialize phases via dep groups, so
@@ -431,6 +448,11 @@ def _prep(topo: Topology, sched: Schedule, cfg: EngineConfig,
         caps_path=jnp.asarray(cap[path]),
         ecn_mask=jnp.asarray((ecn_on[path] & hopmask).astype(np.float32)),
         link_class=jnp.asarray(link_class),
+        src_dev=jnp.asarray(topo.src_dev.astype(np.int32)),
+        sw_sw=jnp.asarray(sw_sw),
+        fabric_link=jnp.asarray(fabric_ext.astype(np.float32)),
+        fabric_path=jnp.asarray((fabric_ext[path] & hopmask)
+                                .astype(np.float32)),
         cls_path=jnp.asarray(link_class[path]),
         n_hops=jnp.asarray(n_hops),
         base_rtt=jnp.asarray(base_rtt), delay_steps=jnp.asarray(delay_steps),
@@ -469,7 +491,7 @@ def _n_qrows(cfg: EngineConfig) -> int:
 
 
 def _init_carry(pp, plan: _Plan, policy: Policy, cfg: EngineConfig,
-                cc_params: dict | None = None):
+                cc_params: dict | None = None, faulty: bool = False):
     Fp, Lk, D = plan.n_flows_pad, plan.n_links, plan.n_dev
     carry = dict(
         backlog=jnp.zeros((Fp, MAXHOP), jnp.float32),
@@ -491,19 +513,44 @@ def _init_carry(pp, plan: _Plan, policy: Policy, cfg: EngineConfig,
         cc=jax.tree_util.tree_map(lambda x: jnp.asarray(x).copy(),
                                   policy.init(_flow_ctx(pp, Fp))),
         soft=jnp.zeros((), jnp.float32),
+        # run health (observers; the step no-op gate also keys on diverged)
+        diverged=jnp.zeros((), bool),
+        deadlock_step=jnp.full((), -1, jnp.int32),
+        storm_run=jnp.zeros((), jnp.int32),
+        storm_step=jnp.full((), -1, jnp.int32),
     )
+    if faulty:
+        carry["lost"] = jnp.zeros(Fp, jnp.float32)      # dropped in-network
+        carry["dup"] = jnp.zeros(Fp, jnp.float32)       # GBN resend overhead
+        carry["loss_sig"] = jnp.zeros(Fp, jnp.float32)  # EWMA loss fraction
     if cfg.queue_stride > 0:
         carry["qbuf"] = jnp.zeros((_n_qrows(cfg), D), jnp.float32)
     return carry
 
 
-def _make_step(policy: Policy, cfg: EngineConfig, plan: _Plan):
+def _make_step(policy: Policy, cfg: EngineConfig, plan: _Plan,
+               faulty: bool = False):
     dt = cfg.dt
     Lk = plan.n_links
     stride = cfg.queue_stride
     n_qrows = _n_qrows(cfg)
+    D = plan.n_dev
+    # pause-cycle reachability via repeated squaring: after k rounds S
+    # covers paths of length up to 2^k, so ceil(log2(D)) rounds suffice
+    dl_rounds = max(1, (max(D, 2) - 1).bit_length())
 
-    def step(carry, it, pp, cc_params, fab):
+    def step(carry, it, pp, cc_params, fab, flt):
+        def _pause_cycle(paused):
+            """Any cycle in the switch->switch PFC wait-for graph?  Link l
+            paused means src_dev(l) waits on dst_dev(l) to resume."""
+            e = (paused[:Lk] & pp["sw_sw"]).astype(jnp.float32)
+            adj = jnp.zeros((D, D), jnp.float32)
+            adj = adj.at[pp["src_dev"], pp["dst_dev"][:Lk]].add(e)
+            S = jnp.minimum(adj, 1.0)
+            for _ in range(dl_rounds):
+                S = jnp.minimum(S + S @ S, 1.0)
+            return jnp.any(jnp.diagonal(S) > 0.5)
+
         wire = _wire_of(policy, cc_params)
         path, hopmask = pp["path"], pp["hopmask"]
         t = it.astype(jnp.float32) * dt
@@ -520,13 +567,21 @@ def _make_step(policy: Policy, cfg: EngineConfig, plan: _Plan):
         rtt = pp["base_rtt"] + (q_d / caps * hopmask).sum(1)
         mark = jnp.clip((q_d - kmin_h) / jnp.maximum(kmax_h - kmin_h, 1.0),
                         0.0, 1.0) * pmax_h
+        if faulty:
+            # ECN misconfiguration: scale marking probability (0 = broken)
+            mark = mark * _per_class(flt.ecn_scale)[pp["cls_path"]]
         mark = mark * pp["ecn_mask"]
         ecn = 1.0 - jnp.prod(1.0 - mark, axis=1)
         util_l = tx_d / caps + q_d / (caps * cfg.t_base_util)
         util = jnp.max(jnp.where(hopmask, util_l, 0.0), axis=1)
-        sig = Signals(ecn=ecn, rtt=rtt, util=util, t=t,
-                      dt=jnp.float32(dt), line=pp["line"],
-                      base_rtt=pp["base_rtt"])
+        if faulty:
+            sig = Signals(ecn=ecn, rtt=rtt, util=util, t=t,
+                          dt=jnp.float32(dt), line=pp["line"],
+                          base_rtt=pp["base_rtt"], loss=carry["loss_sig"])
+        else:
+            sig = Signals(ecn=ecn, rtt=rtt, util=util, t=t,
+                          dt=jnp.float32(dt), line=pp["line"],
+                          base_rtt=pp["base_rtt"])
 
         # ---- 2. CC update -------------------------------------------------
         cc, rate, win = policy.update(cc_params, carry["cc"], sig)
@@ -538,6 +593,9 @@ def _make_step(policy: Policy, cfg: EngineConfig, plan: _Plan):
         dep_t = jnp.where(dep >= 0, carry["g_time"][jnp.maximum(dep, 0)], 0.0)
         started = dep_ok & (t >= dep_t + pp["sdelay"])
         inflight = carry["injected"] - carry["delivered"]
+        if faulty:
+            # lost bytes are not in flight (the NIC saw the NACK/timeout)
+            inflight = inflight - carry["lost"]
         room = jnp.maximum(win - inflight, 0.0)
         inj = jnp.minimum(jnp.minimum(rate * dt, room), carry["remaining"])
         inj = jnp.where(started & (pp["n_hops"] > 0), jnp.maximum(inj, 0.0), 0.0)
@@ -548,11 +606,30 @@ def _make_step(policy: Policy, cfg: EngineConfig, plan: _Plan):
         # ---- 4. PFC gates (per-port) ---------------------------------------
         gate = ~carry["paused"]
         rem_cap = pp["cap"] * dt * gate
+        if faulty:
+            # time-scheduled capacity faults on fabric links: degradation
+            # windows and periodic link flaps (down for flap_down out of
+            # every flap_period seconds)
+            deg = _per_class(flt.degrade)[pp["link_class"]]
+            in_deg = (t >= flt.degrade_t0) & (t < flt.degrade_t1)
+            capmul = jnp.where(in_deg & (pp["fabric_link"] > 0), deg, 1.0)
+            period = jnp.asarray(flt.flap_period, jnp.float32)
+            phase = jnp.mod(t - flt.flap_t0, jnp.maximum(period, 1e-9))
+            flap_down = ((period > 0) & (t >= flt.flap_t0)
+                         & (phase < flt.flap_down))
+            capmul = jnp.where(flap_down & (pp["fabric_link"] > 0),
+                               0.0, capmul)
+            rem_cap = rem_cap * capmul
         rem_cap = rem_cap.at[Lk].set(1e18)
 
         # ---- 5. hop-ordered forwarding -------------------------------------
         delivered = carry["delivered"]
         tx_bytes = jnp.zeros(Lk + 1, jnp.float32)
+        if faulty:
+            # per-hop drop probability: fabric links only (NVLink lossless)
+            loss_p = (_per_class(flt.loss_rate)[pp["cls_path"]]
+                      * pp["fabric_path"])
+            lost_step = jnp.zeros_like(carry["lost"])
         for h in range(MAXHOP):
             if plan.hop[h][0] == "empty":   # no flow ever uses this hop slot
                 continue
@@ -562,6 +639,12 @@ def _make_step(policy: Policy, cfg: EngineConfig, plan: _Plan):
                              0.0)
             moved = backlog[:, h] * frac[path[:, h]]
             backlog = backlog.at[:, h].add(-moved)
+            if faulty:
+                # bytes dropped on this hop consumed upstream capacity but
+                # leave the network; they re-enter `remaining` below
+                drop = moved * loss_p[:, h]
+                lost_step = lost_step + drop
+                moved = moved - drop
             last = pp["n_hops"] == (h + 1)
             delivered = delivered + jnp.where(last, moved, 0.0)
             if h + 1 < MAXHOP:
@@ -569,6 +652,33 @@ def _make_step(policy: Policy, cfg: EngineConfig, plan: _Plan):
             movedsum = frac * dem          # == per-link sum of `moved`
             rem_cap = jnp.maximum(rem_cap - movedsum, 0.0)
             tx_bytes = tx_bytes + movedsum
+
+        if faulty:
+            # ---- 5b. loss recovery (IRN vs go-back-N) ----------------------
+            lost = carry["lost"] + lost_step
+            live = jnp.maximum(injected - delivered - lost, 0.0)
+            gbn = jnp.asarray(flt.gbn, jnp.float32)
+            mtu = jnp.maximum(jnp.asarray(flt.mtu, jnp.float32), 1.0)
+            # IRN (selective retransmit): only the lost bytes are resent.
+            # go-back-N: each lost packet (lost_step/mtu of them) resends on
+            # average half the NIC's outstanding window too.  The window is
+            # the in-network bytes capped at the path BDP: fluid "live"
+            # includes queued backlog, which a real NIC's send window never
+            # covers — uncapped, incast GBN resends faster than the
+            # bottleneck drains and can never terminate
+            w_out = jnp.minimum(live, pp["line"] * pp["base_rtt"])
+            dup_step = gbn * jnp.minimum(lost_step * w_out / (2.0 * mtu),
+                                         live)
+            remaining = remaining + lost_step + dup_step
+            dup = carry["dup"] + dup_step
+            # per-flow EWMA loss fraction (the `loss` CC signal, read next
+            # step so it is RTT-delayed like the other signals)
+            a = jnp.minimum(dt / pp["base_rtt"], 1.0)
+            traf = lost_step + (delivered - carry["delivered"])
+            frac_l = lost_step / jnp.maximum(traf, 1.0)
+            loss_sig = jnp.where(traf > 0,
+                                 (1.0 - a) * carry["loss_sig"] + a * frac_l,
+                                 carry["loss_sig"])
 
         # ---- 6. queues ------------------------------------------------------
         q_link = _reduce(plan.qlink, pp["r_qlink"], backlog.reshape(-1))
@@ -579,6 +689,9 @@ def _make_step(policy: Policy, cfg: EngineConfig, plan: _Plan):
         xoff_l = _per_class(fab.xoff)[pp["link_class"]]   # (Lk+1,)
         xon_l = _per_class(fab.xon)[pp["link_class"]]
         over = (q_port > xoff_l) & pp["can_pause"]
+        if faulty:
+            # PFC misconfiguration / lossy-RoCE: pfc_on=0 disables pausing
+            over = over & (_per_class(flt.pfc_on)[pp["link_class"]] > 0.5)
         under = q_port < xon_l
         paused = jnp.where(over, True, jnp.where(under, False, carry["paused"]))
         # PAUSE frames: one on the off-transition + periodic refreshes while
@@ -590,7 +703,12 @@ def _make_step(policy: Policy, cfg: EngineConfig, plan: _Plan):
 
         # ---- 8. completion --------------------------------------------------
         wire_size = pp["size"] * wire
-        data_done = delivered >= wire_size - cfg.eps_done
+        if faulty:
+            # duplicates arrive at the receiver and are discarded there:
+            # goodput = delivered - dup, so completion needs dup extra bytes
+            data_done = delivered >= wire_size + dup - cfg.eps_done
+        else:
+            data_done = delivered >= wire_size - cfg.eps_done
         marker_done = (pp["n_hops"] == 0) & started
         newly = ~carry["done"] & (jnp.where(pp["n_hops"] > 0, data_done, marker_done))
         done = carry["done"] | newly
@@ -606,15 +724,52 @@ def _make_step(policy: Policy, cfg: EngineConfig, plan: _Plan):
             carry["hist_q"], q_link[None], it % plan.ring, axis=0)
         hist_tx = lax.dynamic_update_slice_in_dim(
             carry["hist_tx"], (tx_bytes / dt)[None], it % plan.ring, axis=0)
-        undeliv = jnp.sum(wire_size - jnp.minimum(delivered, wire_size))
+        if faulty:
+            goodput = jnp.clip(delivered - dup, 0.0, wire_size)
+        else:
+            goodput = jnp.minimum(delivered, wire_size)
+        undeliv = jnp.sum(wire_size - goodput)
         soft = carry["soft"] + dt * undeliv / jnp.maximum(jnp.sum(wire_size), 1.0)
+
+        # ---- 10. run health (observers; never touch the physics above) ------
+        # pause storm: >= storm_frac of pausable ports paused for
+        # storm_steps consecutive steps
+        n_pausable = jnp.maximum(
+            jnp.sum(pp["can_pause"][:Lk].astype(jnp.float32)), 1.0)
+        pfrac = jnp.sum(paused[:Lk].astype(jnp.float32)) / n_pausable
+        storm_run = jnp.where(pfrac >= cfg.storm_frac,
+                              carry["storm_run"] + 1, 0)
+        storm_step = jnp.where((carry["storm_step"] < 0)
+                               & (storm_run >= cfg.storm_steps),
+                               it, carry["storm_step"])
+        # pause-cycle deadlock: checked every deadlock_check_every steps
+        # while switch->switch pauses exist and no cycle was seen yet
+        dl_candidates = jnp.any(paused[:Lk] & pp["sw_sw"])
+        do_check = ((it % cfg.deadlock_check_every == 0) & dl_candidates
+                    & (carry["deadlock_step"] < 0))
+        cycle = lax.cond(do_check, _pause_cycle,
+                         lambda _: jnp.zeros((), bool), paused)
+        deadlock_step = jnp.where(cycle & (carry["deadlock_step"] < 0),
+                                  it, carry["deadlock_step"])
+        # non-finite guard: freeze the lane at the first bad state instead
+        # of poisoning a whole vmapped batch (the step no-op gate and the
+        # early-exit loop both key on `diverged`)
+        probe = (jnp.sum(backlog) + jnp.sum(remaining) + jnp.sum(rate)
+                 + jnp.sum(q_link) + soft)
+        diverged = carry["diverged"] | ~jnp.isfinite(probe)
 
         new_carry = dict(
             backlog=backlog, remaining=remaining, injected=injected,
             delivered=delivered, done=done, t_finish=t_finish,
             g_count=g_count, g_time=g_time, paused=paused,
             pause_count=pause_count, hist_q=hist_q, hist_tx=hist_tx,
-            cc=cc, soft=soft)
+            cc=cc, soft=soft,
+            diverged=diverged, deadlock_step=deadlock_step,
+            storm_run=storm_run, storm_step=storm_step)
+        if faulty:
+            new_carry["lost"] = lost
+            new_carry["dup"] = dup
+            new_carry["loss_sig"] = loss_sig
         if stride > 0:
             # strided timeline recording; rows for skipped steps are dropped
             q_dev = _reduce(plan.qdev, pp["r_qdev"], q_link[:Lk])
@@ -626,23 +781,24 @@ def _make_step(policy: Policy, cfg: EngineConfig, plan: _Plan):
 
 
 def _make_run(policy: Policy, cfg: EngineConfig, plan: _Plan,
-              early_exit: bool):
+              early_exit: bool, faulty: bool = False):
     """Build the full (jittable) stepping loop.
 
-    Each step is gated on ``done.all() | (it >= total)`` so finished steps
-    are no-ops; with ``early_exit`` the chunked while_loop additionally
-    stops integrating at the first chunk boundary where every flow is done.
-    Both variants therefore produce bitwise-identical carries.
+    Each step is gated on ``done.all() | diverged | (it >= total)`` so
+    finished (or frozen non-finite) lanes are no-ops; with ``early_exit``
+    the chunked while_loop additionally stops integrating at the first
+    chunk boundary where every flow is done (or the lane diverged).  Both
+    variants therefore produce bitwise-identical carries.
     """
-    step = _make_step(policy, cfg, plan)
+    step = _make_step(policy, cfg, plan, faulty)
     total = cfg.max_steps * (cfg.max_extends + 1)
     chunk = max(1, min(cfg.chunk_steps, total))
 
-    def run(carry, pp, cc_params, fab):
+    def run(carry, pp, cc_params, fab, flt):
         def body(c, it):
-            c2 = lax.cond(jnp.all(c["done"]) | (it >= total),
+            c2 = lax.cond(jnp.all(c["done"]) | c["diverged"] | (it >= total),
                           lambda c: c,
-                          lambda c: step(c, it, pp, cc_params, fab),
+                          lambda c: step(c, it, pp, cc_params, fab, flt),
                           c)
             return c2, None
 
@@ -657,7 +813,7 @@ def _make_run(policy: Policy, cfg: EngineConfig, plan: _Plan,
 
         def w_cond(state):
             c, it0 = state
-            return (~jnp.all(c["done"])) & (it0 < total)
+            return (~(jnp.all(c["done"]) | c["diverged"])) & (it0 < total)
 
         carry2, it_end = lax.while_loop(w_cond, w_body, (carry, jnp.int32(0)))
         return carry2, jnp.minimum(it_end, total)
@@ -686,16 +842,20 @@ def _policy_cache_key(policy: Policy):
 
 
 def compiled_run(policy: Policy, cfg: EngineConfig, plan: _Plan,
-                 early_exit: bool = True):
+                 early_exit: bool = True, faulty: bool = False):
     """Jitted stepping loop, cached across scenarios with equal plans.
 
     The carry (arg 0) is donated: every run must pass a freshly built one.
     Fabric scalars on ``cfg`` are normalized out of the key (they arrive
     traced via FabricParams), so a fabric sweep never recompiles.
+    ``faulty`` keys the fault-injection compile path: the default (inert)
+    FaultSpec runs the historical fault-free step, so lossless results are
+    bitwise-identical with the fault layer present.
     """
-    key = (_policy_cache_key(policy), _cfg_static(cfg), plan, early_exit)
+    key = (_policy_cache_key(policy), _cfg_static(cfg), plan, early_exit,
+           faulty)
     if key not in _RUN_CACHE:
-        run = _make_run(policy, cfg, plan, early_exit)
+        run = _make_run(policy, cfg, plan, early_exit, faulty)
         _RUN_CACHE[key] = jax.jit(run, donate_argnums=(0,))
     return _RUN_CACHE[key]
 
@@ -710,19 +870,26 @@ class Simulator:
     def __init__(self, topo: Topology, sched: Schedule, policy: Policy,
                  cfg: EngineConfig = EngineConfig(),
                  pad_flows: int | None = None, pad_groups: int | None = None,
-                 fabric_params: FabricParams | None = None):
+                 fabric_params: FabricParams | None = None,
+                 fault_spec: FaultSpec | None = None):
         self.topo, self.sched, self.policy, self.cfg = topo, sched, policy, cfg
         self.fabric = _as_fabric(fabric_params, cfg)
+        self.fault = _as_fault(fault_spec)
         self.pp, self.plan = _prep(topo, sched, cfg, pad_flows, pad_groups)
         self._soft_jit = None
 
     def run(self, cc_params: dict | None = None, early_exit: bool = True,
-            fabric_params: FabricParams | None = None) -> Results:
+            fabric_params: FabricParams | None = None,
+            fault_spec: FaultSpec | None = None) -> Results:
         params = cc_params if cc_params is not None else self.policy.params
         fab = fabric_params if fabric_params is not None else self.fabric
-        fn = compiled_run(self.policy, self.cfg, self.plan, early_exit)
-        carry = _init_carry(self.pp, self.plan, self.policy, self.cfg, params)
-        carry, steps = fn(carry, self.pp, params, fab)
+        flt = fault_spec if fault_spec is not None else self.fault
+        faulty = is_faulty(flt)
+        fn = compiled_run(self.policy, self.cfg, self.plan, early_exit,
+                          faulty)
+        carry = _init_carry(self.pp, self.plan, self.policy, self.cfg,
+                            params, faulty)
+        carry, steps = fn(carry, self.pp, params, fab, flt)
         return self._results(carry, int(steps))
 
     def _results(self, carry, steps_run: int) -> Results:
@@ -735,8 +902,22 @@ class Simulator:
             dev_queue = dev_queue[:rows]
         else:
             dev_queue = np.zeros((0, self.plan.n_dev), np.float32)
+        finished = bool(done.all())
+        diverged = bool(carry["diverged"])
+        deadlock_step = int(carry["deadlock_step"])
+        extend_exhausted = not finished and not diverged
+        if extend_exhausted:
+            total = self.cfg.max_steps * (self.cfg.max_extends + 1)
+            warnings.warn(
+                f"step budget exhausted: {int((~done).sum())}/{F} flows "
+                f"unfinished after {total} steps (max_steps="
+                f"{self.cfg.max_steps}, max_extends={self.cfg.max_extends}) "
+                f"for policy {self.policy.name!r} on {self.topo.name!r}; "
+                "completion_time is a lower bound — raise max_steps/"
+                "max_extends or treat this cell as invalid",
+                RuntimeWarning, stacklevel=3)
         return Results(
-            finished=bool(done.all()),
+            finished=finished,
             completion_time=float(np.max(np.where(np.isfinite(t_fin), t_fin, 0.0))),
             t_finish=t_fin,
             group_time=np.asarray(carry["g_time"])[:G],
@@ -749,6 +930,13 @@ class Simulator:
             meta={"policy": self.policy.name, "topo": self.topo.name,
                   "n_flows": self.sched.n_flows, "steps_run": steps_run,
                   "queue_stride": self.cfg.queue_stride},
+            deadlocked=deadlock_step >= 0,
+            deadlock_step=deadlock_step,
+            storm_step=int(carry["storm_step"]),
+            diverged=diverged,
+            extend_exhausted=extend_exhausted,
+            lost=(np.asarray(carry["lost"])[:F] if "lost" in carry
+                  else None),
         )
 
     # -- differentiable objective -------------------------------------------
@@ -761,13 +949,15 @@ class Simulator:
         completes (steps become no-ops), so the integral is insensitive to
         the step budget's tail.
         """
-        run = _make_run(self.policy, self.cfg, self.plan, early_exit=False)
+        faulty = is_faulty(self.fault)
+        run = _make_run(self.policy, self.cfg, self.plan, early_exit=False,
+                        faulty=faulty)
         pp, plan, policy, cfg = self.pp, self.plan, self.policy, self.cfg
-        default_fab = self.fabric
+        default_fab, default_flt = self.fabric, self.fault
 
         def cost(cc_params, fabric_params=default_fab):
-            carry = _init_carry(pp, plan, policy, cfg, cc_params)
-            carry, _ = run(carry, pp, cc_params, fabric_params)
+            carry = _init_carry(pp, plan, policy, cfg, cc_params, faulty)
+            carry, _ = run(carry, pp, cc_params, fabric_params, default_flt)
             return carry["soft"]
 
         return cost
@@ -786,6 +976,7 @@ class Simulator:
 
 
 def simulate(topo, sched, policy, cfg: EngineConfig = EngineConfig(),
-             fabric_params: FabricParams | None = None) -> Results:
-    return Simulator(topo, sched, policy, cfg,
-                     fabric_params=fabric_params).run()
+             fabric_params: FabricParams | None = None,
+             fault_spec: FaultSpec | None = None) -> Results:
+    return Simulator(topo, sched, policy, cfg, fabric_params=fabric_params,
+                     fault_spec=fault_spec).run()

@@ -1,0 +1,155 @@
+"""Fault-injection layer: declarative fabric faults as a traced pytree.
+
+The paper evaluates CC policies only on a healthy, lossless, private
+fabric — exactly the regime where it finds CC barely matters.  Follow-up
+work shows the interesting behavior appears once that assumption breaks:
+Mittal et al. ("Revisiting Network Support for RDMA") make RoCE *lossy*
+with IRN-style selective retransmit, and Hoefler et al. ("Issues at
+Hyperscale") catalogue flapping/degraded links, pause storms and PFC
+deadlock cycles.  ``FaultSpec`` injects those regimes into the fluid
+engine as *time-scheduled, traced* events:
+
+* **random packet loss** (``loss_rate``) on fabric links, with per-flow
+  loss accounting and a recovery model — IRN selective retransmit
+  (``gbn=0``: only the lost bytes re-enter the flow's remaining work) vs
+  go-back-N (``gbn=1``: each loss additionally resends ~half the
+  in-flight window, modelled via ``mtu`` packetization);
+* **link degradation** (``degrade`` capacity scaling, per link class,
+  active over the ``[degrade_t0, degrade_t1)`` window);
+* **link flaps** (``flap_period``/``flap_down``: fabric links go down for
+  ``flap_down`` seconds out of every ``flap_period``, starting at
+  ``flap_t0``);
+* **ECN / PFC misconfiguration** (``ecn_scale`` scales marking
+  probability — 0 = broken ECN; ``pfc_on=0`` disables PFC pausing, the
+  lossy-RoCE operating point).
+
+Like ``engine.FabricParams``, a ``FaultSpec`` is a registered-dataclass
+pytree whose leaves are either scalars or per-link-class arrays (indexed
+by ``topology.LINK_CLASSES``), so fault grids ride the existing
+one-dispatch vmap path in ``SweepRunner`` (``stacked_fault`` /
+``fault_grid``) and carry on ``ScenarioSpec.fault_spec``.
+
+The all-defaults spec is *statically* inert: ``is_faulty`` inspects the
+concrete leaves and the engine compiles the historical fault-free step
+when it returns False, so lossless defaults stay bitwise-identical to the
+PR-2 engine goldens.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core.cc import ParamSpec
+from repro.core.topology import LINK_CLASS_ID, N_LINK_CLASSES
+
+_FAULT_DEFAULTS = dict(
+    loss_rate=0.0, gbn=0.0, mtu=4096.0,
+    degrade=1.0, degrade_t0=0.0, degrade_t1=0.0,
+    flap_period=0.0, flap_down=0.0, flap_t0=0.0,
+    ecn_scale=1.0, pfc_on=1.0,
+)
+
+# declarative search spaces for the sweepable fault knobs — the same
+# ParamSpec currency as CC policies and FABRIC_PARAM_SPECS, consumed by
+# ``sweep.grid_from_spec``-style drivers and the fault-regime figure
+FAULT_PARAM_SPECS = {
+    "loss_rate": ParamSpec(0.0, lo=0.0, hi=0.1, scale="linear"),
+    "gbn": ParamSpec(0.0, lo=0.0, hi=1.0, integer=True),
+    "mtu": ParamSpec(4096.0, lo=256.0, hi=9000.0, scale="log"),
+    "degrade": ParamSpec(1.0, lo=0.01, hi=1.0, scale="linear"),
+    "flap_period": ParamSpec(0.0, lo=0.0, hi=1.0, scale="linear"),
+    "flap_down": ParamSpec(0.0, lo=0.0, hi=1.0, scale="linear"),
+    "ecn_scale": ParamSpec(1.0, lo=0.0, hi=2.0, scale="linear"),
+    "pfc_on": ParamSpec(1.0, lo=0.0, hi=1.0, integer=True),
+}
+
+RECOVERY_MODES = ("irn", "gbn")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Time-scheduled fabric faults: a pytree traced alongside cc_params.
+
+    Leaves are scalars or per-link-class ``(N_LINK_CLASSES,)`` arrays
+    (``loss_rate``/``degrade``/``ecn_scale``/``pfc_on``), so e.g. only
+    spine downlinks can be lossy.  Loss and flaps apply to *fabric* links
+    only (NVLink is never lossy).  ``gbn`` selects the loss-recovery
+    model as a traced float (0 = IRN selective retransmit, 1 = go-back-N)
+    so both recovery modes sweep in one vmapped dispatch.  The default
+    instance is statically inert (see ``is_faulty``): the engine compiles
+    the historical fault-free step for it.
+    """
+    loss_rate: object = 0.0        # per-packet drop probability, fabric links
+    gbn: object = 0.0              # recovery: 0 = IRN, 1 = go-back-N (traced)
+    mtu: object = 4096.0           # packetization for the GBN resend model (B)
+    degrade: object = 1.0          # capacity multiplier while degraded
+    degrade_t0: object = 0.0       # degradation window [t0, t1) in seconds
+    degrade_t1: object = 0.0
+    flap_period: object = 0.0      # flap cycle length (s); 0 = no flapping
+    flap_down: object = 0.0        # down time at the start of each cycle (s)
+    flap_t0: object = 0.0          # first flap onset (s)
+    ecn_scale: object = 1.0        # ECN marking-probability multiplier
+    pfc_on: object = 1.0           # 0 disables PFC pausing (lossy RoCE)
+
+    FIELDS = ("loss_rate", "gbn", "mtu", "degrade", "degrade_t0",
+              "degrade_t1", "flap_period", "flap_down", "flap_t0",
+              "ecn_scale", "pfc_on")
+
+    @classmethod
+    def lossy_roce(cls, loss_rate: float, recovery: str = "irn",
+                   pfc_on: bool = False, **kw) -> "FaultSpec":
+        """The Mittal et al. operating point: random loss, PFC off, and a
+        named recovery model ("irn" selective retransmit or "gbn")."""
+        if recovery not in RECOVERY_MODES:
+            raise ValueError(f"unknown recovery {recovery!r}; "
+                             f"choose from {RECOVERY_MODES}")
+        return cls(loss_rate=loss_rate, gbn=float(recovery == "gbn"),
+                   pfc_on=float(bool(pfc_on)), **kw)
+
+    @classmethod
+    def check_fields(cls, keys):
+        """Reject names that are not FaultSpec fields."""
+        unknown = set(keys) - set(cls.FIELDS)
+        if unknown:
+            raise ValueError(f"unknown fault params {sorted(unknown)}; "
+                             f"known: {list(cls.FIELDS)}")
+
+    def replace(self, **kw) -> "FaultSpec":
+        return dataclasses.replace(self, **kw)
+
+    def with_class(self, **field_overrides) -> "FaultSpec":
+        """Per-link-class overrides, mirroring ``FabricParams.with_class``:
+        ``FaultSpec().with_class(loss_rate={"spine_down": 1e-3})``."""
+        out = {}
+        for field, overrides in field_overrides.items():
+            base = np.broadcast_to(
+                np.asarray(getattr(self, field), np.float32),
+                (N_LINK_CLASSES,)).copy()
+            for cls_name, v in overrides.items():
+                base[LINK_CLASS_ID[cls_name]] = v
+            out[field] = base
+        return dataclasses.replace(self, **out)
+
+
+jax.tree_util.register_dataclass(FaultSpec,
+                                 data_fields=FaultSpec.FIELDS,
+                                 meta_fields=())
+
+
+def _as_fault(fault_spec) -> FaultSpec:
+    return FaultSpec() if fault_spec is None else fault_spec
+
+
+def is_faulty(flt: FaultSpec) -> bool:
+    """Static predicate: does this spec (or stacked batch of specs) inject
+    any fault at all?  Evaluated on concrete leaves at dispatch time; the
+    engine keys its compile cache on the result, so the all-defaults spec
+    runs the historical fault-free step (bitwise-identical goldens) and
+    traced fault knobs only exist in executables that need them."""
+    for f in FaultSpec.FIELDS:
+        v = np.asarray(getattr(flt, f))
+        if not np.all(v == _FAULT_DEFAULTS[f]):
+            return True
+    return False

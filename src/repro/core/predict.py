@@ -38,6 +38,10 @@ class PredictReport:
     comm_time: float
     pauses: float
     finished: bool
+    # the step budget (max_steps x max_extends) ran out before the last
+    # flow finished: comm_time is a LOWER BOUND, not a measurement —
+    # consumers must mark or drop the cell (figures hatch it)
+    extend_exhausted: bool = False
 
 
 def mesh_groups(mesh_shape: tuple[int, ...], axis: int, n_gpus: int) -> list[list[int]]:
@@ -125,12 +129,15 @@ def predict_policies(ops, mesh_shape, axis_of_op, policies=None,
         return [PredictReport(batch.policy_of(i),
                               float(batch.completion_time[i]),
                               float(batch.pause_count[i].sum()),
-                              bool(batch.finished[i]))
+                              bool(batch.finished[i]),
+                              extend_exhausted=bool(
+                                  batch.extend_exhausted[i]))
                 for i in range(batch.n)]
     specs = [ScenarioSpec(fabric=fab, workload=workload, policy=p)
              for p in policies]
     out = []
     for res in runner.run_specs(specs, cfg=cfg):
         out.append(PredictReport(res.meta["policy"], res.completion_time,
-                                 float(res.pause_count.sum()), res.finished))
+                                 float(res.pause_count.sum()), res.finished,
+                                 extend_exhausted=res.extend_exhausted))
     return out

@@ -174,9 +174,12 @@ class ScenarioSpec:
     a tuple declares a whole policy axis, built into one stacked product
     policy (``cc.stack_policies``) whose lanes batch through a single
     vmapped dispatch (``SweepRunner.grid_spec`` / ``run_policy_axis``).
-    ``cc_params`` and ``fabric_params`` are traced per-run overrides, so
-    specs differing only there share one compiled engine (and can be
-    batched -- see ``SweepRunner.grid_spec``).  ``fabric`` is normally a
+    ``cc_params``, ``fabric_params`` and ``fault_spec`` are traced per-run
+    overrides, so specs differing only there share one compiled engine
+    (and can be batched -- see ``SweepRunner.grid_spec``); ``fault_spec``
+    (``faults.FaultSpec``) declares the fault regime the scenario runs
+    under — loss, flaps, degradation, ECN/PFC misconfiguration — and
+    defaults to the lossless healthy fabric.  ``fabric`` is normally a
     declarative ``FabricSpec``; a prebuilt ``Topology`` is also accepted
     so callers holding one (tests, calibration drivers) can still ride
     the spec path.
@@ -186,6 +189,7 @@ class ScenarioSpec:
     policy: object = "pfc"         # str | Policy | tuple (policy axis)
     cc_params: dict | None = None
     fabric_params: FabricParams | None = None
+    fault_spec: object | None = None   # faults.FaultSpec | None (= healthy)
     name: str = ""
 
     def build(self):
@@ -225,13 +229,15 @@ class ScenarioSpec:
 
 
 def scenario_matrix(fabrics, workloads, policies,
-                    fabric_params=None, stacked=False) -> list[ScenarioSpec]:
+                    fabric_params=None, stacked=False,
+                    fault_spec=None) -> list[ScenarioSpec]:
     """Cross-product helper: the paper's per-figure loops as one list.
 
     ``stacked=True`` folds the policy dimension into each spec instead of
     enumerating it: one spec per (fabric, workload) whose ``policy`` is the
     whole tuple, so ``SweepRunner`` runs the comparison as one vmapped
     policy-axis dispatch rather than a serial per-policy loop.
+    ``fault_spec`` applies one fault regime to every generated spec.
     """
     fabrics = [fabrics] if isinstance(fabrics, (FabricSpec, Topology)) \
         else list(fabrics)
@@ -244,13 +250,13 @@ def scenario_matrix(fabrics, workloads, policies,
             if stacked:
                 out.append(ScenarioSpec(
                     fabric=fab, workload=wl, policy=tuple(policies),
-                    fabric_params=fabric_params,
+                    fabric_params=fabric_params, fault_spec=fault_spec,
                     name=f"{fname}_{wname}_stack"))
                 continue
             for pol in policies:
                 pname = pol if isinstance(pol, str) else pol.name
                 out.append(ScenarioSpec(
                     fabric=fab, workload=wl, policy=pol,
-                    fabric_params=fabric_params,
+                    fabric_params=fabric_params, fault_spec=fault_spec,
                     name=f"{fname}_{wname}_{pname}"))
     return out

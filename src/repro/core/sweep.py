@@ -50,6 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import warnings
 
 import jax
 import numpy as np
@@ -59,6 +60,7 @@ from repro.core.cc import Policy, stack_policies
 from repro.core.engine import (EngineConfig, FabricParams, Results, Simulator,
                                _as_fabric, _cfg_static, _init_carry,
                                _make_run, _next_pow2, _policy_cache_key)
+from repro.core.faults import FaultSpec, _as_fault, is_faulty
 
 
 def _resolve(policy) -> Policy:
@@ -71,7 +73,10 @@ def _bucket(n: int, lo: int = 32) -> int:
 
 @dataclasses.dataclass
 class BatchResults:
-    """One vmapped sweep over B stacked (CC params, FabricParams) sets."""
+    """One vmapped sweep over B stacked (CC params, FabricParams,
+    FaultSpec) sets, with per-lane run-health status: a diverged,
+    deadlocked or budget-exhausted lane is isolated and reported while
+    the healthy lanes complete normally."""
     policy: str
     params: dict                  # stacked CC leaves, shape (B,)
     fabric: dict                  # stacked FabricParams leaves, (B,) or (B,C)
@@ -82,10 +87,40 @@ class BatchResults:
     soft_cost: np.ndarray         # (B,)
     finished: np.ndarray          # (B,) bool
     policy_axis: tuple = ()       # per-member policy label (policy sweeps)
+    fault: dict = dataclasses.field(default_factory=dict)  # FaultSpec leaves
+    diverged: np.ndarray | None = None        # (B,) non-finite lane, frozen
+    deadlock_step: np.ndarray | None = None   # (B,) first pause-cycle step
+    storm_step: np.ndarray | None = None      # (B,) first pause-storm step
+    extend_exhausted: np.ndarray | None = None  # (B,) budget ran out
 
     @property
     def n(self) -> int:
         return len(self.completion_time)
+
+    @property
+    def deadlocked(self) -> np.ndarray:
+        """(B,) bool: a PFC pause-graph cycle was detected in that lane."""
+        if self.deadlock_step is None:
+            return np.zeros(self.n, bool)
+        return self.deadlock_step >= 0
+
+    def lane_status(self) -> list[str]:
+        """Per-lane health: 'ok' | 'diverged' | 'deadlocked' |
+        'exhausted'.  A deadlocked-but-finished lane still reads
+        'deadlocked' (the cycle resolved only because flows drained)."""
+        out = []
+        for i in range(self.n):
+            if self.diverged is not None and self.diverged[i]:
+                out.append("diverged")
+            elif self.deadlocked[i] and not self.finished[i]:
+                out.append("deadlocked")
+            elif not self.finished[i]:
+                out.append("exhausted")
+            elif self.deadlocked[i]:
+                out.append("deadlocked")
+            else:
+                out.append("ok")
+        return out
 
     def best(self) -> int:
         """Index of the fastest *finished* member (lowest completion)."""
@@ -109,27 +144,41 @@ class BatchResults:
         return FabricParams(**{k: np.asarray(v)[i]
                                for k, v in self.fabric.items()})
 
+    def fault_set(self, i: int) -> FaultSpec:
+        """The FaultSpec lane ``i`` ran under (inert spec if no faults)."""
+        if not self.fault:
+            return FaultSpec()
+        return FaultSpec(**{k: np.asarray(v)[i]
+                            for k, v in self.fault.items()})
+
 
 _BATCH_CACHE: dict = {}
 
 
-def _compiled_batch(policy: Policy, cfg: EngineConfig, plan):
-    """vmapped (pp, stacked_params, stacked_fabric) -> stacked finals,
-    cached like ``engine.compiled_run`` so same-shaped scenarios share the
-    executable (fabric scalars on cfg are normalized out of the key)."""
-    key = (_policy_cache_key(policy), _cfg_static(cfg), plan)
+def _compiled_batch(policy: Policy, cfg: EngineConfig, plan,
+                    faulty: bool = False):
+    """vmapped (pp, stacked_params, stacked_fabric, stacked_fault) ->
+    stacked finals, cached like ``engine.compiled_run`` so same-shaped
+    scenarios share the executable (fabric scalars on cfg are normalized
+    out of the key; ``faulty`` keys the fault-injection compile path)."""
+    key = (_policy_cache_key(policy), _cfg_static(cfg), plan, faulty)
     if key not in _BATCH_CACHE:
-        run = _make_run(policy, cfg, plan, early_exit=True)
+        run = _make_run(policy, cfg, plan, early_exit=True, faulty=faulty)
 
-        def one(pp, params, fab):
-            carry = _init_carry(pp, plan, policy, cfg, params)
-            carry, steps = run(carry, pp, params, fab)
-            return {"t_finish": carry["t_finish"], "done": carry["done"],
-                    "pause_count": carry["pause_count"],
-                    "delivered": carry["delivered"], "soft": carry["soft"],
-                    "steps": steps}
+        def one(pp, params, fab, flt):
+            carry = _init_carry(pp, plan, policy, cfg, params, faulty)
+            carry, steps = run(carry, pp, params, fab, flt)
+            out = {"t_finish": carry["t_finish"], "done": carry["done"],
+                   "pause_count": carry["pause_count"],
+                   "delivered": carry["delivered"], "soft": carry["soft"],
+                   "steps": steps, "diverged": carry["diverged"],
+                   "deadlock_step": carry["deadlock_step"],
+                   "storm_step": carry["storm_step"]}
+            if faulty:
+                out["lost"] = carry["lost"]
+            return out
 
-        _BATCH_CACHE[key] = jax.jit(jax.vmap(one, in_axes=(None, 0, 0)))
+        _BATCH_CACHE[key] = jax.jit(jax.vmap(one, in_axes=(None, 0, 0, 0)))
     return _BATCH_CACHE[key]
 
 
@@ -205,6 +254,27 @@ def _stack_fabric(base: FabricParams, stacked: dict | None, B: int) -> FabricPar
     return FabricParams(**leaves)
 
 
+def _stack_fault(base: FaultSpec, stacked: dict | None, B: int) -> FaultSpec:
+    """Stack FaultSpec leaves on a leading B axis, mirroring
+    ``_stack_fabric``: leaves absent from ``stacked`` broadcast the base
+    value; stacked leaves may be (B,) scalars-per-member or
+    (B, N_LINK_CLASSES) per-class arrays."""
+    stacked = stacked or {}
+    FaultSpec.check_fields(stacked)
+    leaves = {}
+    for f in FaultSpec.FIELDS:
+        if f in stacked:
+            v = np.asarray(stacked[f], np.float32)
+            if v.shape[0] != B:
+                raise ValueError(f"fault param {f!r} has leading dim "
+                                 f"{v.shape[0]}, expected batch {B}")
+        else:
+            b = np.asarray(getattr(base, f), np.float32)
+            v = np.broadcast_to(b, (B,) + b.shape)
+        leaves[f] = v
+    return FaultSpec(**leaves)
+
+
 class SweepRunner:
     """Compile-once, run-many driver for ``repro.core.engine``.
 
@@ -267,14 +337,15 @@ class SweepRunner:
     def run(self, topo, sched, policy: Policy | str,
             cc_params: dict | None = None,
             cfg: EngineConfig | None = None,
-            fabric_params: FabricParams | None = None) -> Results:
+            fabric_params: FabricParams | None = None,
+            fault_spec: FaultSpec | None = None) -> Results:
         policy = _resolve(policy)
         cfg = cfg or self.cfg
         # resolve the fabric from the *caller's* cfg: the cached Simulator
         # may have been built under a different default
         fab = _as_fabric(fabric_params, cfg)
         return self.simulator(topo, sched, policy, cfg).run(
-            cc_params, fabric_params=fab)
+            cc_params, fabric_params=fab, fault_spec=_as_fault(fault_spec))
 
     def run_policies(self, topo, sched, policies=None,
                      cfg: EngineConfig | None = None,
@@ -310,7 +381,9 @@ class SweepRunner:
                         cc_overrides: list | None = None,
                         cfg: EngineConfig | None = None,
                         fabric_params: FabricParams | None = None,
-                        stacked_fabric: dict | None = None) -> BatchResults:
+                        stacked_fabric: dict | None = None,
+                        fault_spec: FaultSpec | None = None,
+                        stacked_fault: dict | None = None) -> BatchResults:
         """The paper's per-figure policy comparison as ONE vmapped dispatch.
 
         Stacks ``policies`` into a product policy (``cc.stack_policies``)
@@ -350,7 +423,9 @@ class SweepRunner:
         return self.run_batch(topo, sched, stacked_pol, params,
                               stacked_fabric=stacked_fabric,
                               fabric_params=fabric_params, cfg=cfg,
-                              policy_axis=tuple(labels))
+                              policy_axis=tuple(labels),
+                              stacked_fault=stacked_fault,
+                              fault_spec=fault_spec)
 
     # -- declarative scenarios ----------------------------------------------
     def run_spec(self, spec, cfg: EngineConfig | None = None) -> Results:
@@ -365,7 +440,8 @@ class SweepRunner:
             policy.check_tunable(spec.cc_params)
             cc = dict(policy.params, **spec.cc_params)
         return self.run(topo, sched, policy, cc_params=cc, cfg=cfg,
-                        fabric_params=spec.fabric_params)
+                        fabric_params=spec.fabric_params,
+                        fault_spec=spec.fault_spec)
 
     def run_specs(self, specs, cfg: EngineConfig | None = None) -> list[Results]:
         """Simulate a list of ``ScenarioSpec``s; same-shaped specs share
@@ -374,20 +450,27 @@ class SweepRunner:
 
     def grid_spec(self, spec, param_grid: dict | None = None,
                   fabric_grid: dict | None = None,
-                  cfg: EngineConfig | None = None) -> BatchResults:
-        """Full-factorial CC x fabric grid on one ``ScenarioSpec``.  A spec
-        whose ``policy`` is a tuple/list sweeps the policy axis too (one
-        vmapped policy x CC-param x fabric dispatch)."""
+                  cfg: EngineConfig | None = None,
+                  fault_grid: dict | None = None) -> BatchResults:
+        """Full-factorial CC x fabric x fault grid on one ``ScenarioSpec``.
+        A spec whose ``policy`` is a tuple/list sweeps the policy axis too
+        (one vmapped policy x CC-param x fabric x fault dispatch); the
+        spec's ``fault_spec`` broadcasts to every lane not covered by
+        ``fault_grid`` axes."""
         if isinstance(spec.policy, (tuple, list)):
             topo, sched, _ = spec.build()
             return self.grid(topo, sched, None, param_grid, fabric_grid,
                              fabric_params=spec.fabric_params,
                              cc_params=spec.cc_params, cfg=cfg,
-                             policy_axis=list(spec.policy))
+                             policy_axis=list(spec.policy),
+                             fault_grid=fault_grid,
+                             fault_spec=spec.fault_spec)
         topo, sched, policy = spec.build()
         return self.grid(topo, sched, policy, param_grid, fabric_grid,
                          fabric_params=spec.fabric_params,
-                         cc_params=spec.cc_params, cfg=cfg)
+                         cc_params=spec.cc_params, cfg=cfg,
+                         fault_grid=fault_grid,
+                         fault_spec=spec.fault_spec)
 
     # -- batched parameter sweeps -------------------------------------------
     def run_batch(self, topo, sched, policy: Policy | str,
@@ -396,17 +479,26 @@ class SweepRunner:
                   fabric_params: FabricParams | None = None,
                   cc_params: dict | None = None,
                   cfg: EngineConfig | None = None,
-                  policy_axis: tuple = ()) -> BatchResults:
-        """Simulate B (CC params, FabricParams) sets in one vmapped call.
+                  policy_axis: tuple = (),
+                  stacked_fault: dict | None = None,
+                  fault_spec: FaultSpec | None = None) -> BatchResults:
+        """Simulate B (CC params, FabricParams, FaultSpec) sets in one
+        vmapped call.
 
         ``stacked_params`` maps CC param name -> length-B array;
-        ``stacked_fabric`` maps FabricParams field -> (B,) or (B, C) array.
+        ``stacked_fabric`` maps FabricParams field -> (B,) or (B, C) array;
+        ``stacked_fault`` maps FaultSpec field -> (B,) or (B, C) array.
         Missing CC params broadcast from the policy defaults (overridden by
         ``cc_params``); missing fabric fields broadcast from
-        ``fabric_params`` (default: the runner config's scalars).  Queue
+        ``fabric_params`` (default: the runner config's scalars); missing
+        fault fields broadcast from ``fault_spec`` (default: inert).  Queue
         timelines are never recorded for batched runs (per-member buffers).
         ``policy_axis`` carries the per-lane policy labels when ``policy``
         is a stacked product policy (see ``run_policy_axis``).
+
+        Lane isolation: a diverged (non-finite) lane freezes in place, a
+        deadlocked or budget-exhausted lane is flagged, and the healthy
+        lanes complete normally — see ``BatchResults.lane_status``.
         """
         policy = _resolve(policy)
         stacked_params = stacked_params or {}
@@ -415,9 +507,10 @@ class SweepRunner:
             policy.check_tunable(cc_params)
         sizes = [len(np.asarray(v)) for v in stacked_params.values()]
         sizes += [np.asarray(v).shape[0] for v in (stacked_fabric or {}).values()]
+        sizes += [np.asarray(v).shape[0] for v in (stacked_fault or {}).values()]
         if not sizes:
-            raise ValueError("empty batch: provide stacked_params and/or "
-                             "stacked_fabric")
+            raise ValueError("empty batch: provide stacked_params, "
+                             "stacked_fabric and/or stacked_fault")
         if len(set(sizes)) > 1:
             raise ValueError(f"inconsistent batch sizes {sorted(set(sizes))}")
         B = sizes[0]
@@ -427,13 +520,21 @@ class SweepRunner:
                 for k, v in base_cc.items()}
         cfg = dataclasses.replace(cfg or self.cfg, queue_stride=0)
         fab = _stack_fabric(_as_fabric(fabric_params, cfg), stacked_fabric, B)
+        flt = _stack_fault(_as_fault(fault_spec), stacked_fault, B)
+        faulty = is_faulty(flt)
         sim = self.simulator(topo, sched, policy, cfg)
-        out = _compiled_batch(policy, cfg, sim.plan)(sim.pp, full, fab)
+        out = _compiled_batch(policy, cfg, sim.plan, faulty)(
+            sim.pp, full, fab, flt)
         F = sim.plan.n_flows
         t_fin = np.asarray(out["t_finish"])[:, :F]
         done = np.asarray(out["done"])[:, :F]
         ct = np.max(np.where(np.isfinite(t_fin), t_fin, 0.0), axis=1)
-        return BatchResults(
+        finished = done.all(axis=1)
+        diverged = np.asarray(out["diverged"])
+        deadlock_step = np.asarray(out["deadlock_step"])
+        storm_step = np.asarray(out["storm_step"])
+        extend_exhausted = ~finished & ~diverged
+        batch = BatchResults(
             policy=policy.name, params=full,
             fabric={k: np.asarray(getattr(fab, k))
                     for k in FabricParams.FIELDS},
@@ -441,9 +542,23 @@ class SweepRunner:
             pause_count=np.asarray(out["pause_count"]),
             delivered=np.asarray(out["delivered"])[:, :F],
             soft_cost=np.asarray(out["soft"]),
-            finished=done.all(axis=1),
+            finished=finished,
             policy_axis=tuple(policy_axis),
+            fault=({k: np.asarray(getattr(flt, k))
+                    for k in FaultSpec.FIELDS} if faulty else {}),
+            diverged=diverged, deadlock_step=deadlock_step,
+            storm_step=storm_step, extend_exhausted=extend_exhausted,
         )
+        unhealthy = [(i, s) for i, s in enumerate(batch.lane_status())
+                     if s != "ok"]
+        if unhealthy:
+            warnings.warn(
+                f"{len(unhealthy)}/{B} sweep lanes unhealthy "
+                f"({', '.join(f'#{i}:{s}' for i, s in unhealthy[:8])}"
+                f"{', ...' if len(unhealthy) > 8 else ''}); healthy lanes "
+                "completed normally — inspect BatchResults.lane_status()",
+                RuntimeWarning, stacklevel=2)
+        return batch
 
     def grid(self, topo, sched, policy: Policy | str | None = None,
              param_grid: dict | None = None,
@@ -451,28 +566,39 @@ class SweepRunner:
              fabric_params: FabricParams | None = None,
              cc_params: dict | None = None,
              cfg: EngineConfig | None = None,
-             policy_axis: list | None = None) -> BatchResults:
+             policy_axis: list | None = None,
+             fault_grid: dict | None = None,
+             fault_spec: FaultSpec | None = None) -> BatchResults:
         """Full-factorial joint sweep: CC ``{param: [values...]}`` x fabric
-        ``{field: [values...]}`` -> ONE vmapped batched run.
+        ``{field: [values...]}`` x fault ``{field: [values...]}`` -> ONE
+        vmapped batched run.
 
-        Fabric grid axes may list scalars or per-class arrays (each entry
-        one grid point).  With both grids given, the batch enumerates the
-        full cross product — e.g. 3 kmin x 3 xoff x 4 CC points = B=36 in
-        a single compiled dispatch.
+        Fabric/fault grid axes may list scalars or per-class arrays (each
+        entry one grid point).  With several grids given, the batch
+        enumerates the full cross product — e.g. 3 kmin x 3 xoff x 4 CC
+        points = B=36 in a single compiled dispatch; a ``fault_grid`` like
+        ``{"loss_rate": [0, 1e-5, 1e-3], "gbn": [0, 1]}`` crosses fault
+        regimes into the same dispatch (non-grid fault fields broadcast
+        from ``fault_spec``).
 
         ``policy_axis`` adds the *policy* as a grid dimension: the named
         policies are stacked into one product policy and the cross product
-        gains a lane per member (policy x CC-param x fabric, still one
-        dispatch).  With a policy axis, ``policy`` must be None and
+        gains a lane per member (policy x CC-param x fabric x fault, still
+        one dispatch).  With a policy axis, ``policy`` must be None and
         ``param_grid`` keys must be member-namespaced (``"dcqcn.rai_frac"``
         — only that member's lanes respond to the axis).
         """
         param_grid = param_grid or {}
         fabric_grid = fabric_grid or {}
-        overlap = set(param_grid) & set(fabric_grid)
-        if overlap:
-            raise ValueError(f"params {sorted(overlap)} appear in both the "
-                             "CC and fabric grids")
+        fault_grid = fault_grid or {}
+        FaultSpec.check_fields(fault_grid)
+        for a, b, what in (((param_grid, fabric_grid, "CC and fabric")),
+                           ((param_grid, fault_grid, "CC and fault")),
+                           ((fabric_grid, fault_grid, "fabric and fault"))):
+            overlap = set(a) & set(b)
+            if overlap:
+                raise ValueError(f"params {sorted(overlap)} appear in both "
+                                 f"the {what} grids")
         labels, wires = (), None
         if policy_axis is not None:
             if policy is not None:
@@ -491,19 +617,21 @@ class SweepRunner:
         elif policy is None:
             raise ValueError("policy is required without a policy_axis")
         axes = [np.asarray(v, np.float32)
-                for v in list(param_grid.values()) + list(fabric_grid.values())]
-        names = list(param_grid) + list(fabric_grid)
+                for v in list(param_grid.values()) + list(fabric_grid.values())
+                + list(fault_grid.values())]
+        names = list(param_grid) + list(fabric_grid) + list(fault_grid)
         if policy_axis is not None:
             names.append("_which")
             axes.append(np.arange(len(labels), dtype=np.float32))
         if not axes:
             raise ValueError("empty grid")
-        # index-space meshgrid so per-class (point, C)-shaped fabric axes
-        # enumerate points along axis 0
+        # index-space meshgrid so per-class (point, C)-shaped fabric/fault
+        # axes enumerate points along axis 0
         idx = np.meshgrid(*[np.arange(len(a)) for a in axes], indexing="ij")
         flat = [i.reshape(-1) for i in idx]
         stacked = {k: axes[j][flat[j]] for j, k in enumerate(names)}
-        stacked_cc = {k: stacked[k] for k in names if k not in fabric_grid}
+        stacked_cc = {k: stacked[k] for k in names
+                      if k not in fabric_grid and k not in fault_grid}
         if wires is not None:
             # the wire factor is paired with the selected member, never an
             # independent axis
@@ -512,4 +640,6 @@ class SweepRunner:
             topo, sched, policy, stacked_cc,
             stacked_fabric={k: stacked[k] for k in fabric_grid},
             fabric_params=fabric_params, cc_params=cc_params, cfg=cfg,
-            policy_axis=labels)
+            policy_axis=labels,
+            stacked_fault={k: stacked[k] for k in fault_grid},
+            fault_spec=fault_spec)

@@ -257,13 +257,62 @@ def test_policy_invariants_property(name, seed):
 
 
 # ---------------------------------------------------------------------------
+# the loss signal (fault-injection layer): loss-aware policies react,
+# everyone is a bitwise no-op at loss 0
+# ---------------------------------------------------------------------------
+
+def _sig_loss(loss, **kw):
+    return _sig(**kw).replace(loss=jnp.full((F,), loss, jnp.float32))
+
+
+@pytest.mark.parametrize("name", ALL_POLICIES)
+def test_loss_reaction_matches_loss_aware_flag(name):
+    """loss_aware policies slow down under a loss signal (NACK-driven
+    cut); the rest ignore it entirely."""
+    pol = get_policy(name)
+    kw = dict(t=1e-4, ecn=0.0, rtt=2e-6, util=0.2)
+    st0 = _init(pol)
+    _, r0, w0 = pol.update(pol.params, st0, _sig(**kw))
+    _, rl, wl = pol.update(pol.params, _init(pol), _sig_loss(0.3, **kw))
+    r0, w0 = np.asarray(r0), np.asarray(w0)
+    rl, wl = np.asarray(rl), np.asarray(wl)
+    if pol.loss_aware:
+        assert np.all(rl <= r0) and np.all(wl <= w0), name
+        assert (rl < r0).any() or (wl < w0).any(), name
+    else:
+        assert np.array_equal(rl, r0) and np.array_equal(wl, w0), name
+
+
+@pytest.mark.parametrize("name", ALL_POLICIES)
+def test_explicit_zero_loss_is_bitwise_noop(name):
+    """A Signals carrying an explicit loss=0 array must produce bitwise
+    the same update as the default-constructed (scalar 0) signal — the
+    contract that keeps lossless goldens exact."""
+    pol = get_policy(name)
+    kw = dict(t=1e-4, ecn=0.4, rtt=1e-4, util=1.5)
+    st1, r1, w1 = pol.update(pol.params, _init(pol), _sig(**kw))
+    st2, r2, w2 = pol.update(pol.params, _init(pol), _sig_loss(0.0, **kw))
+    assert np.array_equal(np.asarray(r1), np.asarray(r2)), name
+    assert np.array_equal(np.asarray(w1), np.asarray(w2)), name
+    for a, b in zip(jax.tree_util.tree_leaves(st1),
+                    jax.tree_util.tree_leaves(st2)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), name
+
+
+def test_loss_aware_flag_covers_the_reactive_policies():
+    aware = {n for n in ALL_POLICIES if get_policy(n).loss_aware}
+    assert {"dcqcn", "dctcp", "timely", "hpcc", "hpcc_pint"} <= aware
+    assert "pfc" not in aware
+
+
+# ---------------------------------------------------------------------------
 # typed structs
 # ---------------------------------------------------------------------------
 
 def test_signals_is_a_pytree():
     sig = _sig(t=1e-4, ecn=0.3)
     leaves = jax.tree_util.tree_leaves(sig)
-    assert len(leaves) == 7
+    assert len(leaves) == 8  # incl. the loss signal (defaults to 0)
     doubled = jax.tree_util.tree_map(lambda x: x * 2, sig)
     np.testing.assert_allclose(np.asarray(doubled.ecn),
                                2 * np.asarray(sig.ecn))

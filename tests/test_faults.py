@@ -1,0 +1,379 @@
+"""Fault-injection layer: lossy RoCE (IRN vs go-back-N recovery), link
+degradation/flaps, ECN/PFC misconfiguration, and the run-health machinery
+(pause-storm + pause-cycle deadlock detection, divergence lane isolation,
+extend-exhausted reporting).
+
+The whole suite carries the ``fault`` marker (``pytest -m fault``).
+
+The first tests pin the layer's central contract: the all-defaults
+``FaultSpec`` is *statically* inert — the engine compiles the historical
+fault-free step for it, so lossless results stay bitwise-identical to the
+PR-2 goldens.
+"""
+import json
+import os
+import warnings
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.core.cc import get_policy
+from repro.core.collectives import Schedule, incast
+from repro.core.engine import EngineConfig, FabricParams, Simulator, simulate
+from repro.core.faults import (FAULT_PARAM_SPECS, RECOVERY_MODES, FaultSpec,
+                               is_faulty)
+from repro.core.scenario import (CollectiveSpec, FabricSpec, IncastSpec,
+                                 ScenarioSpec)
+from repro.core.sweep import SweepRunner
+from repro.core.topology import (NIC_BW, NIC_LAT, SWITCH_BUF, _Builder,
+                                 single_switch)
+
+pytestmark = pytest.mark.fault
+
+GOLD = json.load(open(os.path.join(os.path.dirname(__file__), "golden",
+                                   "engine_seed.json")))
+
+
+def _incast_case(size=5e6):
+    topo = single_switch(8)
+    return topo, incast(topo, list(range(1, 8)), 0, size)
+
+
+def _cfg(**kw):
+    kw.setdefault("dt", 1e-6)
+    kw.setdefault("max_steps", 1500)
+    kw.setdefault("max_extends", 3)
+    kw.setdefault("queue_stride", 0)
+    return EngineConfig(**kw)
+
+
+def _quiet_run(sim, **kw):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        return sim.run(**kw)
+
+
+# ---------------------------------------------------------------------------
+# the central contract: defaults are statically inert
+# ---------------------------------------------------------------------------
+
+def test_default_faultspec_is_statically_inert():
+    assert not is_faulty(FaultSpec())
+    assert is_faulty(FaultSpec(loss_rate=1e-4))
+    assert is_faulty(FaultSpec(pfc_on=0.0))
+    # a per-class array equal to the default everywhere is still inert
+    assert not is_faulty(FaultSpec().with_class(loss_rate={}))
+    assert is_faulty(FaultSpec().with_class(loss_rate={"spine_down": 1e-3}))
+
+
+def test_explicit_default_spec_is_bitwise_identical():
+    """run(fault_spec=FaultSpec()) must reuse the fault-free compile path
+    and produce bitwise-identical arrays."""
+    topo, sched = _incast_case()
+    sim = Simulator(topo, sched, get_policy("dcqcn"), _cfg())
+    base = sim.run()
+    with_spec = sim.run(fault_spec=FaultSpec())
+    assert np.array_equal(base.t_finish, with_spec.t_finish)
+    assert np.array_equal(base.delivered, with_spec.delivered)
+    assert np.array_equal(base.pause_count, with_spec.pause_count)
+    assert with_spec.lost is None          # fault carry never materialized
+
+
+def test_lossless_defaults_match_seed_goldens():
+    """With the fault layer present but disabled, the engine still
+    reproduces the PR-2 seed goldens."""
+    topo, sched = _incast_case(10e6)
+    g = GOLD["incast_ss8/pfc"]
+    cfg = EngineConfig(dt=1e-6, max_steps=1500, max_extends=5)
+    r = simulate(topo, sched, get_policy("pfc"), cfg, fault_spec=FaultSpec())
+    assert r.finished == g["finished"]
+    np.testing.assert_allclose(r.completion_time, g["completion_time"],
+                               rtol=1e-5)
+    t_gold = np.array([np.inf if v is None else v for v in g["t_finish"]])
+    np.testing.assert_allclose(r.t_finish, t_gold, rtol=1e-5)
+
+
+def test_faultspec_validation():
+    with pytest.raises(ValueError, match="unknown recovery"):
+        FaultSpec.lossy_roce(1e-3, recovery="arq")
+    with pytest.raises(ValueError, match="unknown fault params"):
+        FaultSpec.check_fields(["loss_rat"])
+    assert RECOVERY_MODES == ("irn", "gbn")
+    for k, s in FAULT_PARAM_SPECS.items():
+        assert s.bounded, k
+        assert s.lo <= s.default <= s.hi, k
+
+
+# ---------------------------------------------------------------------------
+# lossy RoCE: loss accounting + recovery models
+# ---------------------------------------------------------------------------
+
+def test_loss_slows_completion_and_gbn_worse_than_irn():
+    topo, sched = _incast_case()
+    sim = Simulator(topo, sched, get_policy("pfc"), _cfg())
+    r0 = sim.run()
+    r_irn = _quiet_run(sim, fault_spec=FaultSpec.lossy_roce(
+        1e-3, "irn", pfc_on=True))
+    r_gbn = _quiet_run(sim, fault_spec=FaultSpec.lossy_roce(
+        1e-3, "gbn", pfc_on=True))
+    assert r0.finished and r_irn.finished and r_gbn.finished
+    assert r_irn.lost.sum() > 0
+    # retransmits cost time; go-back-N resends ~half the in-flight window
+    # per loss on top of IRN's selective retransmit, so it pays more
+    assert r0.completion_time < r_irn.completion_time
+    assert r_irn.completion_time < r_gbn.completion_time
+
+
+def test_pfc_off_operating_point_disables_pausing():
+    """lossy_roce defaults to pfc_on=False: the Mittal et al. regime —
+    random loss, no PAUSE frames at all."""
+    topo, sched = _incast_case()
+    # tiny thresholds: the lossless run pauses heavily
+    fab = FabricParams(xoff=100e3, xon=50e3)
+    sim = Simulator(topo, sched, get_policy("pfc"), _cfg())
+    r_on = sim.run(fabric_params=fab)
+    assert r_on.pause_count.sum() > 0
+    r_off = _quiet_run(sim, fabric_params=fab,
+                       fault_spec=FaultSpec.lossy_roce(1e-4, "irn"))
+    assert r_off.pause_count.sum() == 0
+    assert r_off.finished
+
+
+def test_loss_signal_reaches_loss_aware_policies():
+    """A loss-aware policy (dcqcn) must react to the loss signal: the
+    NACK-driven rate cuts make the lossy run measurably slower than the
+    lossless one, beyond the raw retransmitted bytes."""
+    topo, sched = _incast_case()
+    sim = Simulator(topo, sched, get_policy("dcqcn"), _cfg())
+    r0 = sim.run()
+    r = _quiet_run(sim, fault_spec=FaultSpec.lossy_roce(
+        1e-5, "irn", pfc_on=True))
+    assert r.finished
+    assert r.lost.sum() > 0
+    assert r.completion_time > r0.completion_time
+
+
+def test_ecn_misconfiguration_changes_dcqcn_behavior():
+    """ecn_scale=0 breaks marking: DCQCN sees no congestion signal and
+    the run degenerates to PFC-style behavior (different completion)."""
+    topo, sched = _incast_case()
+    sim = Simulator(topo, sched, get_policy("dcqcn"), _cfg())
+    r0 = sim.run()
+    r = _quiet_run(sim, fault_spec=FaultSpec(ecn_scale=0.0))
+    assert r.finished
+    assert r.completion_time != r0.completion_time
+
+
+def test_link_degradation_and_flaps_delay_completion():
+    topo, sched = _incast_case()
+    sim = Simulator(topo, sched, get_policy("pfc"), _cfg())
+    r0 = sim.run()
+    r_deg = _quiet_run(sim, fault_spec=FaultSpec(
+        degrade=0.5, degrade_t0=0.0, degrade_t1=1.0))
+    r_flap = _quiet_run(sim, fault_spec=FaultSpec(
+        flap_period=200e-6, flap_down=100e-6))
+    assert r_deg.finished and r_flap.finished
+    assert r_deg.completion_time > r0.completion_time
+    assert r_flap.completion_time > r0.completion_time
+
+
+def test_per_class_fault_leaves():
+    """Per-link-class loss: the single-switch incast's last hop is a
+    ``tor_down`` link, so loss scoped to that class must bite while loss
+    scoped to an absent class (``spine_down``) must not."""
+    topo, sched = _incast_case(2e6)
+    sim = Simulator(topo, sched, get_policy("pfc"), _cfg())
+    hit = FaultSpec().with_class(loss_rate={"tor_down": 1e-3})
+    miss = FaultSpec().with_class(loss_rate={"spine_down": 1e-3})
+    r_hit = _quiet_run(sim, fault_spec=hit)
+    r_miss = _quiet_run(sim, fault_spec=miss)
+    assert r_hit.lost.sum() > 0
+    assert r_miss.lost.sum() == 0
+
+
+@given(st.floats(min_value=0.0, max_value=5e-3),
+       st.sampled_from(RECOVERY_MODES))
+@settings(max_examples=8, deadline=None)
+def test_loss_invariants_property(loss_rate, recovery):
+    """Injected loss never drives the flow accounting out of bounds: lost
+    bytes stay non-negative and finite, delivered stays finite and
+    non-negative, and IRN (no duplicates) never delivers runaway extra
+    bytes past the flow size."""
+    topo, sched = _incast_case(1e6)
+    cfg = _cfg(max_steps=1000, max_extends=2)
+    sim = Simulator(topo, sched, get_policy("pfc"), cfg)
+    r = _quiet_run(sim, fault_spec=FaultSpec.lossy_roce(
+        loss_rate, recovery, pfc_on=True))
+    if loss_rate == 0.0 and recovery == "irn":
+        assert r.lost is None        # statically inert spec
+        return
+    assert np.all(np.isfinite(r.lost)) and np.all(r.lost >= 0)
+    assert np.all(np.isfinite(r.delivered)) and np.all(r.delivered >= 0)
+    if recovery == "irn":
+        assert np.all(r.delivered <= sched.size * 1.1)
+
+
+# ---------------------------------------------------------------------------
+# run health: pause storms, pause-cycle deadlock, divergence isolation
+# ---------------------------------------------------------------------------
+
+def _ring_case(size=2e6):
+    """3 switches in a directed ring with a genuine cyclic buffer
+    dependency: flow i goes Gi -> G(i+2) the long way round, so every
+    ring link is 2x oversubscribed and each one's congestion backs up
+    into the previous — with small PFC thresholds the pause wait-for
+    graph forms a 3-cycle (a textbook PFC deadlock; up-down CLOS routing
+    is deadlock-free and can never build one)."""
+    b = _Builder("ring3")
+    for g in range(3):
+        b.add_dev(f"gpu{g}", False)
+    sw = [b.add_dev(f"sw{i}", True, SWITCH_BUF) for i in range(3)]
+    up = [b.add_link(g, sw[g], NIC_BW, NIC_LAT, ecn=False) for g in range(3)]
+    ring = [b.add_link(sw[i], sw[(i + 1) % 3], NIC_BW, NIC_LAT, ecn=True,
+                       cls="tor_up") for i in range(3)]
+    down = [b.add_link(sw[g], g, NIC_BW, NIC_LAT, ecn=True, cls="tor_down")
+            for g in range(3)]
+    topo = b.build(3, up, {"kind": "ring", "switches": sw})
+    F = 3
+    path = np.full((F, 4), -1, np.int32)
+    for i in range(F):
+        path[i] = [up[i], ring[i], ring[(i + 1) % 3], down[(i + 2) % 3]]
+    sched = Schedule(path, np.full(F, 4, np.int32),
+                     np.full(F, size, np.float32),
+                     np.zeros(F, np.int32), np.full(F, -1, np.int32),
+                     np.zeros(F, np.float32), n_groups=1, group_names=["g0"])
+    return topo, sched
+
+
+def test_pause_cycle_deadlock_is_detected():
+    topo, sched = _ring_case()
+    cfg = _cfg(max_steps=600, max_extends=0)
+    sim = Simulator(topo, sched, get_policy("pfc"), cfg)
+    r = _quiet_run(sim, fabric_params=FabricParams(xoff=30e3, xon=15e3))
+    assert r.deadlocked
+    assert r.deadlock_step >= 0
+    assert r.storm_step >= 0        # every port pausing is also a storm
+    assert not r.finished
+    # huge thresholds: no pauses, no cycle — the ring just runs at half rate
+    r_ok = _quiet_run(sim, fabric_params=FabricParams(xoff=32e6, xon=16e6))
+    assert not r_ok.deadlocked
+    assert r_ok.storm_step == -1
+    assert r_ok.finished
+
+
+def test_deadlocked_lane_reports_in_batch():
+    """The same ring deadlock through the vmapped sweep path: the
+    deadlocked lane is flagged per lane while a healthy lane completes."""
+    topo, sched = _ring_case()
+    cfg = _cfg(max_steps=600, max_extends=0)
+    runner = SweepRunner(cfg)
+    with pytest.warns(RuntimeWarning, match="lanes unhealthy"):
+        batch = runner.run_batch(
+            topo, sched, "pfc",
+            stacked_fabric={"xoff": np.asarray([30e3, 32e6], np.float32),
+                            "xon": np.asarray([15e3, 16e6], np.float32)})
+    assert batch.deadlocked.tolist() == [True, False]
+    assert batch.finished.tolist() == [False, True]
+    assert batch.lane_status() == ["deadlocked", "ok"]
+
+
+def test_diverged_lane_is_isolated_in_batch():
+    """A NaN cc-param lane freezes and flags instead of poisoning the
+    whole vmapped batch (the guard is always on, no fault spec needed)."""
+    topo, sched = _incast_case(2e6)
+    runner = SweepRunner(_cfg())
+    stacked = {"g": np.asarray([np.nan, 1 / 256], np.float32)}
+    with pytest.warns(RuntimeWarning, match="diverged"):
+        batch = runner.run_batch(topo, sched, "dcqcn", stacked)
+    assert batch.diverged.tolist() == [True, False]
+    assert batch.lane_status() == ["diverged", "ok"]
+    assert bool(batch.finished[1])
+    assert np.all(np.isfinite(batch.t_finish[1]))
+    # the diverged lane is never eligible as best()
+    assert batch.best() == 1
+
+
+def test_extend_exhausted_flag_and_warning():
+    topo, sched = _incast_case()
+    cfg = _cfg(max_steps=10, max_extends=0)
+    sim = Simulator(topo, sched, get_policy("pfc"), cfg)
+    with pytest.warns(RuntimeWarning, match="step budget exhausted"):
+        r = sim.run()
+    assert r.extend_exhausted
+    assert not r.finished and not r.diverged
+    # batched flavor: the per-lane flag plus the unhealthy-lane warning
+    runner = SweepRunner(cfg)
+    with pytest.warns(RuntimeWarning, match="lanes unhealthy"):
+        batch = runner.grid(topo, sched, "dcqcn", {"g": [1 / 256, 1 / 128]})
+    assert batch.extend_exhausted.tolist() == [True, True]
+    assert batch.lane_status() == ["exhausted", "exhausted"]
+
+
+# ---------------------------------------------------------------------------
+# sweep integration: fault grids in one vmapped dispatch
+# ---------------------------------------------------------------------------
+
+def test_clos_allreduce_fault_sweep_one_dispatch():
+    """The acceptance sweep: loss {0, 1e-5, 1e-3} x {IRN, go-back-N} x 3
+    policies over a CLOS all-reduce as ONE vmapped dispatch with
+    per-lane health."""
+    from repro.core import sweep as sweep_mod
+    spec = ScenarioSpec(
+        fabric=FabricSpec(family="clos", n_racks=2, nodes_per_rack=1,
+                          gpus_per_node=4),
+        workload=CollectiveSpec("1d", 4e6),
+        policy=("dcqcn", "hpcc", "timely"))
+    runner = SweepRunner(_cfg(max_steps=2000, max_extends=2))
+    n_exec_before = len(sweep_mod._BATCH_CACHE)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        batch = runner.grid_spec(
+            spec, fault_grid={"loss_rate": [0.0, 1e-5, 1e-3],
+                              "gbn": [0.0, 1.0]})
+    # 3 loss x 2 recovery x 3 policies, one compiled batch executable
+    assert batch.n == 18
+    assert len(sweep_mod._BATCH_CACHE) == n_exec_before + 1
+    assert len(batch.lane_status()) == 18
+    assert {batch.policy_of(i) for i in range(18)} == \
+        {"dcqcn", "hpcc", "timely"}
+    loss = batch.fault["loss_rate"]
+    gbn = batch.fault["gbn"]
+    np.testing.assert_allclose(sorted(set(loss.tolist())),
+                               [0.0, 1e-5, 1e-3], rtol=1e-6)
+    # loss-free lanes are bitwise insensitive to the recovery model
+    for i in range(18):
+        if loss[i] != 0.0:
+            continue
+        for j in range(18):
+            if (loss[j] == 0.0 and gbn[j] != gbn[i]
+                    and batch.policy_of(j) == batch.policy_of(i)):
+                np.testing.assert_array_equal(batch.t_finish[i],
+                                              batch.t_finish[j])
+    # per policy, completion is monotone non-decreasing in the loss rate
+    # (among finished IRN lanes; an exhausted 1e-3 lane just drops out —
+    # that is exactly what the per-lane health reporting is for)
+    for polname in ("dcqcn", "hpcc", "timely"):
+        lanes = [i for i in range(18)
+                 if batch.policy_of(i) == polname and gbn[i] == 0.0
+                 and batch.finished[i]]
+        lanes.sort(key=lambda i: loss[i])
+        cts = [batch.completion_time[i] for i in lanes]
+        assert all(a <= b + 1e-9 for a, b in zip(cts, cts[1:]))
+
+
+def test_scenario_spec_carries_fault_spec():
+    topo, sched = _incast_case()
+    spec_ok = ScenarioSpec(fabric=topo, workload=IncastSpec(7, 5e6),
+                           policy="pfc")
+    spec_bad = ScenarioSpec(fabric=topo, workload=IncastSpec(7, 5e6),
+                            policy="pfc",
+                            fault_spec=FaultSpec.lossy_roce(
+                                1e-3, "gbn", pfc_on=True))
+    runner = SweepRunner(_cfg())
+    r_ok = runner.run_spec(spec_ok)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        r_bad = runner.run_spec(spec_bad)
+    assert r_ok.finished and r_bad.finished
+    assert r_bad.completion_time > r_ok.completion_time
