@@ -4,9 +4,13 @@ and per-figure-scenario wall time.  Writes BENCH_engine.json.
 Usage:
     PYTHONPATH=src python benchmarks/bench_engine.py [--smoke] [--out PATH]
 
-``--smoke`` runs one warm repetition of the headline scenario only (CI-
-friendly, ~15 s including compile); the full run adds the per-figure
-scenario timings and a vmap sweep-throughput measurement.
+``--smoke`` runs one warm repetition of the headline scenario plus the
+fault, step_impl-comparison and backend-calibration smokes (CI-friendly);
+the full run adds the per-figure scenario timings, a vmap sweep-throughput
+measurement and larger calibration probes.  The measured serial-vs-batched
+crossover table (``sweep.calibrate_backend``) and the analytic engine-step
+roofline land in BENCH_engine.json under "calibration" and
+"roofline_engine_step".
 
 The committed BENCH_engine.json demonstrates the PR-2 acceptance gate:
 warm wall-clock of the headline scenario (32-GPU CLOS 1D All-Reduce,
@@ -272,6 +276,54 @@ def bench_figures() -> dict:
     return out
 
 
+def bench_step_impl() -> dict:
+    """step_impl comparison smoke: the fused Pallas step path vs the jnp
+    path on a small incast, correctness (allclose completion time) plus
+    warm wall time.  Off-TPU the Pallas path runs in interpret mode
+    (correctness configuration, not a speed claim — the wall-clock win
+    needs a compiled accelerator backend; see README 'Backends and
+    kernels')."""
+    import dataclasses
+
+    import numpy as np
+
+    topo = single_switch(4)
+    sched = incast(topo, [1, 2, 3], 0, 2e6)
+    cfg_j = EngineConfig(dt=1e-6, max_steps=400, max_extends=1,
+                         queue_stride=0, step_impl="jnp")
+    cfg_p = dataclasses.replace(cfg_j, step_impl="pallas")
+    out = {"backend": jax.default_backend(),
+           "pallas_mode": ("compiled" if jax.default_backend() == "tpu"
+                           else "interpret")}
+    res = {}
+    for tag, cfg in (("jnp", cfg_j), ("pallas", cfg_p)):
+        sim = Simulator(topo, sched, get_policy("dcqcn"), cfg)
+        r = sim.run()                       # warmup: compile
+        t0 = time.time()
+        r = sim.run()
+        out[f"{tag}_warm_s"] = round(time.time() - t0, 3)
+        res[tag] = r
+    out["completion_allclose"] = bool(np.allclose(
+        res["jnp"].completion_time, res["pallas"].completion_time,
+        rtol=1e-4))
+    assert out["completion_allclose"], "step_impl paths disagree"
+    return out
+
+
+def bench_calibration(smoke: bool = True) -> dict:
+    """Measure the serial-vs-batched crossover table for the running
+    backend (``sweep.calibrate_backend``) and return its JSON record —
+    this is the table ``SweepRunner.batch_pays_off`` /
+    ``policy_axis_pays_off`` consult once cached."""
+    from repro.core import sweep as sweep_mod
+    cfg = EngineConfig(dt=2e-6, max_steps=300 if smoke else 800,
+                       max_extends=1, queue_stride=0)
+    cal = sweep_mod.calibrate_backend(
+        probe_flows=(12, 90) if smoke else (90, 870, 1806),
+        B=4 if smoke else 6, cfg=cfg)
+    return cal.record()
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -294,6 +346,14 @@ def main():
     report["speedup_vs_seed"] = round(
         args.seed_warm_s / report["headline"]["warm_s"], 1)
     report["faults"] = bench_faults()
+    report["step_impl"] = bench_step_impl()
+    report["calibration"] = bench_calibration(smoke=args.smoke)
+    try:                         # run.py imports us as benchmarks.*;
+        from benchmarks.roofline import engine_step_roofline
+    except ImportError:          # direct script run: sys.path[0]=benchmarks/
+        from roofline import engine_step_roofline
+    report["roofline_engine_step"] = engine_step_roofline(
+        report["headline"]["n_flows"])
     if not args.smoke:
         report["sweep_vmap"] = bench_sweep()
         report["policy_axis"] = bench_policy_axis()

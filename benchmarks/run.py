@@ -31,10 +31,13 @@ def main() -> None:
             traceback.print_exc()
         emit([(fn.__name__, "wall_s", "-", round(time.time() - t0, 1))])
 
-    # roofline (reads dry-run artifacts if present)
+    # engine-step roofline: analytic, always available
+    from benchmarks import roofline
+    emit(roofline.engine_step_rows())
+
+    # model roofline (reads dry-run artifacts if present)
     if os.path.isdir("experiments/dryrun") and os.listdir("experiments/dryrun"):
         print("--- roofline (from dry-run artifacts) ---")
-        from benchmarks import roofline
         roofline.main()
     else:
         print("roofline,SKIPPED (run: python -m repro.launch.dryrun --all)")

@@ -70,7 +70,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core.cc import FlowCtx, ParamSpec, Policy, Signals
+from repro.core.cc import (FlowCtx, ParamSpec, Policy, Signals,
+                           kernel_eligible)
 from repro.core.collectives import Schedule
 from repro.core.faults import FaultSpec, _as_fault, is_faulty
 from repro.core.topology import (LINK_CLASS_ID, MAXHOP, N_LINK_CLASSES,
@@ -100,6 +101,13 @@ class EngineConfig:
     # hot-path knobs (do not change simulated physics)
     chunk_steps: int = 256        # early-exit check granularity (in-jit)
     queue_stride: int = 1         # record dev_queue every k steps; 0 = off
+    # step backend: "auto" resolves per jax.default_backend() — the fused
+    # Pallas engine-step kernels (repro.kernels.engine_step) on TPU/GPU,
+    # the historical jnp path elsewhere, so CPU results stay bitwise
+    # identical to the engine goldens.  "pallas" forces the kernel path
+    # (interpret-mode off-TPU: the CI correctness configuration); "jnp"
+    # forces the reference path on any backend.
+    step_impl: str = "auto"       # "auto" | "jnp" | "pallas"
     # run-health detection (observers only; never change simulated physics)
     deadlock_check_every: int = 64   # pause-cycle check cadence (steps)
     storm_frac: float = 0.5          # pause storm: fraction of ports paused
@@ -188,10 +196,26 @@ def _per_class(v):
     return jnp.broadcast_to(jnp.asarray(v, jnp.float32), (N_LINK_CLASSES,))
 
 
+def resolve_step_impl(cfg: EngineConfig) -> str:
+    """Backend dispatch for the engine step: "auto" picks the fused Pallas
+    kernels on accelerator backends and the jnp reference path on CPU (so
+    the default path reproduces the engine goldens bitwise there)."""
+    impl = cfg.step_impl
+    if impl == "auto":
+        return "pallas" if jax.default_backend() in ("tpu", "gpu") else "jnp"
+    if impl not in ("jnp", "pallas"):
+        raise ValueError(f"step_impl must be 'auto', 'jnp' or 'pallas', "
+                         f"got {impl!r}")
+    return impl
+
+
 def _cfg_static(cfg: EngineConfig) -> EngineConfig:
     """The compile-cache view of a config: fabric scalars are dynamic
-    (delivered via FabricParams), so they are normalized out of the key."""
-    return dataclasses.replace(cfg, **_FABRIC_DEFAULTS)
+    (delivered via FabricParams), so they are normalized out of the key;
+    ``step_impl`` is resolved so "auto" shares the executable of the
+    backend it resolves to."""
+    return dataclasses.replace(cfg, step_impl=resolve_step_impl(cfg),
+                               **_FABRIC_DEFAULTS)
 
 
 @dataclasses.dataclass
@@ -539,6 +563,28 @@ def _make_step(policy: Policy, cfg: EngineConfig, plan: _Plan,
     # covers paths of length up to 2^k, so ceil(log2(D)) rounds suffice
     dl_rounds = max(1, (max(D, 2) - 1).bit_length())
 
+    # backend dispatch: route stages 1-2 (+ the gather reductions and the
+    # PFC pause signal) through the fused Pallas engine-step kernels when
+    # the resolved impl is "pallas" and the policy's update is expressible
+    # in the kernel's flat-array form; stacked product policies (tuple
+    # state + lax.switch) stay on the jnp path.  The jnp branch below is
+    # the historical step, emitted unchanged — goldens stay bitwise.
+    use_kernel = (resolve_step_impl(cfg) == "pallas"
+                  and kernel_eligible(policy))
+    if use_kernel:
+        from repro.kernels import default_interpret
+        from repro.kernels.engine_step import ops as es_ops
+        interpret = default_interpret(None)
+
+        def reduce_(strategy, arrs, vals):
+            if strategy[0] == "gather":
+                return es_ops.segment_reduce(vals, arrs["idx"], strategy[1],
+                                             strategy[2],
+                                             interpret=interpret)
+            return _reduce(strategy, arrs, vals)
+    else:
+        reduce_ = _reduce
+
     def step(carry, it, pp, cc_params, fab, flt):
         def _pause_cycle(paused):
             """Any cycle in the switch->switch PFC wait-for graph?  Link l
@@ -564,27 +610,44 @@ def _make_step(policy: Policy, cfg: EngineConfig, plan: _Plan,
         q_d = carry["hist_q"].reshape(-1)[flat]
         tx_d = carry["hist_tx"].reshape(-1)[flat]
         caps = pp["caps_path"]
-        rtt = pp["base_rtt"] + (q_d / caps * hopmask).sum(1)
-        mark = jnp.clip((q_d - kmin_h) / jnp.maximum(kmax_h - kmin_h, 1.0),
-                        0.0, 1.0) * pmax_h
-        if faulty:
-            # ECN misconfiguration: scale marking probability (0 = broken)
-            mark = mark * _per_class(flt.ecn_scale)[pp["cls_path"]]
-        mark = mark * pp["ecn_mask"]
-        ecn = 1.0 - jnp.prod(1.0 - mark, axis=1)
-        util_l = tx_d / caps + q_d / (caps * cfg.t_base_util)
-        util = jnp.max(jnp.where(hopmask, util_l, 0.0), axis=1)
-        if faulty:
-            sig = Signals(ecn=ecn, rtt=rtt, util=util, t=t,
-                          dt=jnp.float32(dt), line=pp["line"],
-                          base_rtt=pp["base_rtt"], loss=carry["loss_sig"])
+        if use_kernel:
+            # ---- 1+2 fused: signals + CC update in one Pallas pass ------
+            # ECN misconfiguration folds into the marking ceiling (same
+            # product as the jnp path's post-clip scale)
+            pmax_eff = pmax_h
+            if faulty:
+                pmax_eff = pmax_eff * _per_class(flt.ecn_scale)[pp["cls_path"]]
+            loss = (carry["loss_sig"] if faulty
+                    else jnp.zeros_like(pp["line"]))
+            cc, rate, win = es_ops.fused_step(
+                policy, q_d=q_d, tx_d=tx_d, caps=caps,
+                ecn_mask=pp["ecn_mask"], hopmask=hopmask,
+                kmin_h=kmin_h, kmax_h=kmax_h, pmax_h=pmax_eff,
+                base_rtt=pp["base_rtt"], line=pp["line"], loss=loss,
+                state=carry["cc"], params=cc_params, t=t, dt=dt,
+                t_base_util=cfg.t_base_util, interpret=interpret)
         else:
-            sig = Signals(ecn=ecn, rtt=rtt, util=util, t=t,
-                          dt=jnp.float32(dt), line=pp["line"],
-                          base_rtt=pp["base_rtt"])
+            rtt = pp["base_rtt"] + (q_d / caps * hopmask).sum(1)
+            mark = jnp.clip((q_d - kmin_h) / jnp.maximum(kmax_h - kmin_h, 1.0),
+                            0.0, 1.0) * pmax_h
+            if faulty:
+                # ECN misconfiguration: scale marking probability (0 = broken)
+                mark = mark * _per_class(flt.ecn_scale)[pp["cls_path"]]
+            mark = mark * pp["ecn_mask"]
+            ecn = 1.0 - jnp.prod(1.0 - mark, axis=1)
+            util_l = tx_d / caps + q_d / (caps * cfg.t_base_util)
+            util = jnp.max(jnp.where(hopmask, util_l, 0.0), axis=1)
+            if faulty:
+                sig = Signals(ecn=ecn, rtt=rtt, util=util, t=t,
+                              dt=jnp.float32(dt), line=pp["line"],
+                              base_rtt=pp["base_rtt"], loss=carry["loss_sig"])
+            else:
+                sig = Signals(ecn=ecn, rtt=rtt, util=util, t=t,
+                              dt=jnp.float32(dt), line=pp["line"],
+                              base_rtt=pp["base_rtt"])
 
-        # ---- 2. CC update -------------------------------------------------
-        cc, rate, win = policy.update(cc_params, carry["cc"], sig)
+            # ---- 2. CC update ---------------------------------------------
+            cc, rate, win = policy.update(cc_params, carry["cc"], sig)
 
         # ---- 3. injection --------------------------------------------------
         dep = pp["dep"]
@@ -633,7 +696,7 @@ def _make_step(policy: Policy, cfg: EngineConfig, plan: _Plan,
         for h in range(MAXHOP):
             if plan.hop[h][0] == "empty":   # no flow ever uses this hop slot
                 continue
-            dem = _reduce(plan.hop[h], pp["r_hop"][h], backlog[:, h])
+            dem = reduce_(plan.hop[h], pp["r_hop"][h], backlog[:, h])
             frac = jnp.where(dem > 0,
                              jnp.minimum(1.0, rem_cap / jnp.maximum(dem, 1e-9)),
                              0.0)
@@ -681,24 +744,33 @@ def _make_step(policy: Policy, cfg: EngineConfig, plan: _Plan,
                                  carry["loss_sig"])
 
         # ---- 6. queues ------------------------------------------------------
-        q_link = _reduce(plan.qlink, pp["r_qlink"], backlog.reshape(-1))
-        # per-ingress-port occupancy at the receiving switch
-        q_port = _reduce(plan.qport, pp["r_qport"], backlog.reshape(-1))
-
-        # ---- 7. PFC per-port hysteresis --------------------------------------
+        q_link = reduce_(plan.qlink, pp["r_qlink"], backlog.reshape(-1))
         xoff_l = _per_class(fab.xoff)[pp["link_class"]]   # (Lk+1,)
         xon_l = _per_class(fab.xon)[pp["link_class"]]
-        over = (q_port > xoff_l) & pp["can_pause"]
+        can = pp["can_pause"]
         if faulty:
             # PFC misconfiguration / lossy-RoCE: pfc_on=0 disables pausing
-            over = over & (_per_class(flt.pfc_on)[pp["link_class"]] > 0.5)
-        under = q_port < xon_l
-        paused = jnp.where(over, True, jnp.where(under, False, carry["paused"]))
+            can = can & (_per_class(flt.pfc_on)[pp["link_class"]] > 0.5)
+        if use_kernel and plan.qport[0] == "gather":
+            # ---- 6b+7 fused: per-port occupancy reduction + hysteresis --
+            q_port, paused = es_ops.segment_reduce_pfc(
+                backlog.reshape(-1), pp["r_qport"]["idx"], plan.qport[1],
+                plan.qport[2], xoff_l, xon_l, can, carry["paused"],
+                interpret=interpret)
+        else:
+            # per-ingress-port occupancy at the receiving switch
+            q_port = reduce_(plan.qport, pp["r_qport"], backlog.reshape(-1))
+
+            # ---- 7. PFC per-port hysteresis ---------------------------------
+            over = (q_port > xoff_l) & can
+            under = q_port < xon_l
+            paused = jnp.where(over, True,
+                               jnp.where(under, False, carry["paused"]))
         # PAUSE frames: one on the off-transition + periodic refreshes while
         # the port stays paused (how NS3 counts them)
         frames = ((paused & ~carry["paused"])[:Lk].astype(jnp.float32)
                   + paused[:Lk].astype(jnp.float32) * (dt / cfg.pause_resend))
-        pause_count = carry["pause_count"] + _reduce(plan.pause, pp["r_pause"],
+        pause_count = carry["pause_count"] + reduce_(plan.pause, pp["r_pause"],
                                                      frames)
 
         # ---- 8. completion --------------------------------------------------
@@ -714,7 +786,7 @@ def _make_step(policy: Policy, cfg: EngineConfig, plan: _Plan,
         done = carry["done"] | newly
         # completion happens at the END of this step's transfer window
         t_finish = jnp.where(newly, t + dt, carry["t_finish"])
-        g_count = carry["g_count"] + _reduce(plan.group, pp["r_group"],
+        g_count = carry["g_count"] + reduce_(plan.group, pp["r_group"],
                                              newly.astype(jnp.float32))
         g_done_new = (g_count >= pp["gsize"] - 0.5) & ~(carry["g_count"] >= pp["gsize"] - 0.5)
         g_time = jnp.where(g_done_new, t + dt, carry["g_time"])
@@ -772,7 +844,7 @@ def _make_step(policy: Policy, cfg: EngineConfig, plan: _Plan,
             new_carry["loss_sig"] = loss_sig
         if stride > 0:
             # strided timeline recording; rows for skipped steps are dropped
-            q_dev = _reduce(plan.qdev, pp["r_qdev"], q_link[:Lk])
+            q_dev = reduce_(plan.qdev, pp["r_qdev"], q_link[:Lk])
             row = jnp.where(it % stride == 0, it // stride, n_qrows)
             new_carry["qbuf"] = carry["qbuf"].at[row].set(q_dev, mode="drop")
         return new_carry

@@ -30,14 +30,18 @@ one executable per ``(policy logic, EngineConfig, static plan)``.
 Batched runs never record the per-device queue timeline (it is a
 per-member ``(T, D)`` buffer); use a plain ``run`` for Fig 5-7 style plots.
 
-CPU note: vmap batching pays off where per-op dispatch overhead dominates
-— small/medium scenarios such as population autotuning and CC grid sweeps
-(measured ~2-4.5x over serial at B=8-16 on the dev container; see
-``benchmarks/bench_engine.py``).  For very large gather-bound scenarios on
-CPU the batched stepping loses its early-exit advantage (it runs until the
-*slowest* member finishes and computes both sides of the done-gate), so
-prefer serial ``run``/``run_policies`` there; on accelerator backends the
-batch dimension vectorizes fully.
+Backend note: vmap batching pays off where per-op dispatch overhead
+dominates — small/medium scenarios such as population autotuning and CC
+grid sweeps (measured ~2-4.5x over serial at B=8-16 on the dev container;
+see ``benchmarks/bench_engine.py``).  For very large gather-bound
+scenarios on CPU the batched stepping loses its early-exit advantage (it
+runs until the *slowest* member finishes and computes both sides of the
+done-gate); on accelerator backends the batch dimension vectorizes fully.
+``batch_pays_off``/``policy_axis_pays_off`` decide serial-vs-batched from
+the active backend's crossover table: ``calibrate_backend()`` measures it
+(serial vs batched at a few probe sizes, cached per backend, JSON records
+for BENCH_engine.json), ``DEFAULT_CROSSOVERS`` is the uncalibrated
+fallback.
 
     runner = SweepRunner(EngineConfig(dt=2e-6, max_steps=4000, queue_stride=0))
     results = runner.run_policies(topo, sched, ["pfc", "dcqcn", "hpcc"])
@@ -275,6 +279,178 @@ def _stack_fault(base: FaultSpec, stacked: dict | None, B: int) -> FaultSpec:
     return FaultSpec(**leaves)
 
 
+# -- backend calibration ----------------------------------------------------
+
+_INF = float("inf")
+
+# Fallback crossover tables (largest n_flows at which the batched path
+# still wins wall-clock) used before any measurement has run on a backend.
+# "sweep" = same-policy vmapped parameter sweep vs a serial loop;
+# "policy_axis" = stacked lax.switch product policy vs per-policy runs.
+# CPU numbers are from BENCH_engine.json on the dev container (the sweep
+# wins 4-5x below ~2k flows and loses 0.3x on the 7936-flow All-Reduce;
+# the policy axis loses at every measured CPU scale).  Backends not listed
+# (TPU/GPU) vectorize the batch axis fully, so batching always pays off
+# there (inf).
+DEFAULT_CROSSOVERS: dict = {
+    "cpu": {"sweep": 2048.0, "policy_axis": 0.0},
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendCalibration:
+    """Serial-vs-batched crossover table for one JAX backend, either
+    measured (``calibrate_backend``) or the ``DEFAULT_CROSSOVERS``
+    fallback.  ``crossover[kind]`` is the largest flow count at which the
+    batched path still wins: ``inf`` = batching always pays off, ``0.0`` =
+    never."""
+    backend: str
+    source: str = "default"            # "default" | "measured"
+    crossover: dict = dataclasses.field(default_factory=dict)
+    probes: tuple = ()                 # (kind, n_flows, serial_s, batched_s)
+
+    def pays_off(self, kind: str, n_flows: int | None = None) -> bool:
+        """Should the batched path run for ``kind`` at ``n_flows``?  With
+        ``n_flows=None`` (scenario-independent callers) batching is
+        recommended only when it wins at *every* scale."""
+        thr = float(self.crossover.get(kind, _INF))
+        if n_flows is None:
+            return thr == _INF
+        return n_flows <= thr
+
+    def record(self) -> dict:
+        """JSON-safe dict for BENCH_engine.json (inf encoded as "inf")."""
+        enc = {k: ("inf" if float(v) == _INF else float(v))
+               for k, v in self.crossover.items()}
+        return {"backend": self.backend, "source": self.source,
+                "crossover": enc,
+                "probes": [{"kind": k, "n_flows": n, "serial_s": s,
+                            "batched_s": b}
+                           for k, n, s, b in self.probes]}
+
+
+_CALIBRATION: dict = {}
+
+
+def get_calibration(backend: str | None = None) -> BackendCalibration:
+    """The active crossover table for ``backend`` (default: the running
+    JAX backend): the cached ``calibrate_backend`` measurement if one
+    exists, else the ``DEFAULT_CROSSOVERS`` entry (unlisted backends get
+    inf thresholds — batching always on, accelerator behavior)."""
+    backend = backend or jax.default_backend()
+    cal = _CALIBRATION.get(backend)
+    if cal is None:
+        table = dict(DEFAULT_CROSSOVERS.get(
+            backend, {"sweep": _INF, "policy_axis": _INF}))
+        cal = BackendCalibration(backend=backend, crossover=table)
+    return cal
+
+
+def set_calibration(cal: BackendCalibration) -> None:
+    """Install a crossover table for ``cal.backend`` (e.g. one loaded from
+    a previous BENCH_engine.json record)."""
+    _CALIBRATION[cal.backend] = cal
+
+
+def reset_calibration(backend: str | None = None) -> None:
+    """Drop cached calibrations (all backends when ``backend`` is None),
+    reverting ``get_calibration`` to the defaults."""
+    if backend is None:
+        _CALIBRATION.clear()
+    else:
+        _CALIBRATION.pop(backend, None)
+
+
+def _measure_crossover(kind: str, n_flows: int, B: int,
+                       cfg: EngineConfig) -> tuple:
+    """Default calibration probe: time a serial loop against one batched
+    dispatch for a ``kind`` sweep on a 1D All-Reduce of ~``n_flows``
+    flows — the autotune/grid-sweep regime these heuristics actually
+    gate (bytes scale with ranks so the step budget stays occupied and
+    the comparison is not dominated by trivial-run early-exit).  Returns
+    ``(actual_n_flows, serial_s, batched_s)``, both sides timed
+    post-warmup (compiles excluded)."""
+    import time as _time
+
+    from repro.core.collectives import allreduce_1d
+    from repro.core.topology import single_switch
+
+    # allreduce_1d over R ranks with 4 chunks ~= 8*R*(R-1) flows
+    R = max(2, int(round(0.5 + (0.25 + n_flows / 8.0) ** 0.5)))
+    topo = single_switch(R)
+    sched = allreduce_1d(topo, list(range(R)), 1e6 * R)
+    runner = SweepRunner(cfg)
+    if kind == "sweep":
+        policy = cc_mod.get_policy("dcqcn")
+        scale = np.linspace(0.5, 2.0, B).astype(np.float32)
+
+        def serial():
+            for s in scale:
+                runner.run(topo, sched, policy,
+                           dict(policy.params, rai_frac=float(0.03 * s)))
+
+        def batched():
+            runner.run_batch(topo, sched, policy,
+                             {"rai_frac": 0.03 * scale})
+    elif kind == "policy_axis":
+        pols = list(cc_mod.ALL_POLICIES)[:max(2, B)]
+
+        def serial():
+            runner.run_policies(topo, sched, pols)
+
+        def batched():
+            runner.run_policy_axis(topo, sched, pols)
+    else:
+        raise ValueError(f"unknown calibration kind: {kind!r}")
+
+    out = []
+    for fn in (serial, batched):
+        fn()                                    # warmup: compile
+        t0 = _time.perf_counter()
+        fn()
+        out.append(_time.perf_counter() - t0)
+    return sched.n_flows, out[0], out[1]
+
+
+def calibrate_backend(probe_flows=(90, 1806), B: int = 6,
+                      cfg: EngineConfig | None = None,
+                      kinds=("sweep", "policy_axis"),
+                      backend: str | None = None,
+                      _measure=None) -> BackendCalibration:
+    """Measure the serial-vs-batched wall-clock crossover on the running
+    backend and cache it; ``SweepRunner.batch_pays_off`` /
+    ``policy_axis_pays_off`` consult the cached table from then on.
+
+    For each ``kind`` the batched path is timed against the serial loop at
+    each probe size; the crossover is the geometric mean of the largest
+    winning and smallest losing probe (all probes win -> inf, all lose ->
+    0.0).  ``_measure(kind, n_flows, B, cfg)`` is injectable for tests and
+    deterministic benchmarks; ``BackendCalibration.record()`` gives the
+    JSON form ``benchmarks/bench_engine.py`` writes to BENCH_engine.json.
+    """
+    backend = backend or jax.default_backend()
+    cfg = cfg or EngineConfig(dt=2e-6, max_steps=600, max_extends=1,
+                              queue_stride=0)
+    measure = _measure or _measure_crossover
+    probes, table = [], {}
+    for kind in kinds:
+        wins, losses = [], []
+        for n in probe_flows:
+            nf, serial_s, batched_s = measure(kind, n, B, cfg)
+            probes.append((kind, int(nf), float(serial_s), float(batched_s)))
+            (wins if batched_s < serial_s else losses).append(float(nf))
+        if not losses:
+            table[kind] = _INF
+        elif not wins:
+            table[kind] = 0.0
+        else:
+            table[kind] = float((max(wins) * min(losses)) ** 0.5)
+    cal = BackendCalibration(backend=backend, source="measured",
+                             crossover=table, probes=tuple(probes))
+    set_calibration(cal)
+    return cal
+
+
 class SweepRunner:
     """Compile-once, run-many driver for ``repro.core.engine``.
 
@@ -288,14 +464,6 @@ class SweepRunner:
     # so cap the count and evict FIFO; compiled executables live in the
     # engine's global cache and survive eviction
     MAX_SIMS = 64
-
-    # CPU crossover for batched stepping: the vmap path wins while per-op
-    # dispatch dominates (~<2k flows: 4.9x at B=8 on the dev container)
-    # and loses on gather-bound giants where it also forfeits early-exit
-    # (0.3x on the 7936-flow 32-GPU All-Reduce; BENCH_engine.json
-    # sweep_vmap vs policy_axis).  Accelerator backends vectorize the
-    # batch axis fully, so the batched path always wins there.
-    CPU_BATCH_FLOWS = 2048
 
     def __init__(self, cfg: EngineConfig | None = None, bucket: bool = True):
         self.cfg = cfg or EngineConfig()
@@ -360,21 +528,22 @@ class SweepRunner:
         return out
 
     def batch_pays_off(self, sched) -> bool:
-        """Heuristic: should a *same-policy* parameter sweep over this
-        scenario run batched (one vmapped dispatch) or serial?"""
-        return (jax.default_backend() != "cpu"
-                or sched.n_flows <= self.CPU_BATCH_FLOWS)
+        """Should a *same-policy* parameter sweep over this scenario run
+        batched (one vmapped dispatch) or serial?  Decided from the active
+        backend's crossover table — the cached ``calibrate_backend``
+        measurement, or ``DEFAULT_CROSSOVERS`` when uncalibrated."""
+        return get_calibration().pays_off("sweep", sched.n_flows)
 
-    def policy_axis_pays_off(self) -> bool:
+    def policy_axis_pays_off(self, sched=None) -> bool:
         """Like ``batch_pays_off`` but for the stacked policy axis, which
         additionally evaluates *every* member's update per lane (vmapped
-        ``lax.switch`` runs all branches): on CPU the serial per-policy
-        loop wins at every measured scale (BENCH_engine.json policy_axis),
-        so the axis defaults to batched only where the batch dimension
-        truly vectorizes — the win on CPU is architectural (one compile,
-        zero recompiles across policy x param x fabric grids), not
-        wall-clock."""
-        return jax.default_backend() != "cpu"
+        ``lax.switch`` runs all branches).  Called without ``sched`` the
+        axis is recommended only where it wins at every measured scale: on
+        CPU it loses wall-clock everywhere (BENCH_engine.json policy_axis)
+        — the win there is architectural (one compile, zero recompiles
+        across policy x param x fabric grids), not wall-clock."""
+        return get_calibration().pays_off(
+            "policy_axis", None if sched is None else sched.n_flows)
 
     # -- the batched policy axis --------------------------------------------
     def run_policy_axis(self, topo, sched, policies=None,

@@ -4,6 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import default_interpret
 from repro.kernels.cc_update.cc_update import dcqcn_update_tiled
 
 ORDER = ("rc", "rt", "alpha", "t_cut", "t_inc", "t_alpha", "inc_count", "jit")
@@ -14,9 +15,11 @@ def _tile(x, n_pad):
 
 
 def dcqcn_update(state: dict, ecn: jax.Array, line: jax.Array, t,
-                 params: dict, interpret: bool = True) -> dict:
+                 params: dict, interpret: bool | None = None) -> dict:
     """state: dict of (F,) float32 (cc.make_dcqcn layout).  Returns the
-    updated dict (rate == updated rc)."""
+    updated dict (rate == updated rc).  ``interpret=None`` auto-detects:
+    compiled Mosaic on TPU, interpret mode elsewhere."""
+    interpret = default_interpret(interpret)
     F = ecn.shape[0]
     n_pad = (-F) % 128
     tiles = tuple(_tile(state[k].astype(jnp.float32), n_pad) for k in ORDER)

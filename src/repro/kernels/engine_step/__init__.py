@@ -1,0 +1,6 @@
+# Fused engine-step kernels: signals+policy update and padded-gather
+# segment reduction.  ops.py (flat wrappers the engine dispatches to),
+# engine_step.py (tiled pallas_calls), ref.py (pure-jnp oracle).
+from repro.kernels.engine_step.ops import (fused_step,  # noqa: F401
+                                           segment_reduce,
+                                           segment_reduce_pfc)

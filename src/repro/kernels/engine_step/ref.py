@@ -1,0 +1,50 @@
+"""Oracle: engine stages 1-2 (and the gather reduction) in pure jnp.
+
+Mirrors ``repro.core.engine._make_step``'s signal formulas and
+``_reduce``'s "gather" strategy exactly, so the kernel allclose tests pin
+the fused Pallas path to the engine's jnp semantics.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.cc import Signals
+
+
+def fused_step_ref(policy, *, q_d, tx_d, caps, ecn_mask, hopmask,
+                   kmin_h, kmax_h, pmax_h, base_rtt, line, loss,
+                   state: dict, params: dict, t, dt: float,
+                   t_base_util: float):
+    """Flat-array reference for ``ops.fused_step`` (same signature minus
+    ``interpret``): returns ``(state', rate, win)``."""
+    hopmask = hopmask.astype(bool)
+    rtt = base_rtt + (q_d / caps * hopmask).sum(1)
+    mark = jnp.clip((q_d - kmin_h) / jnp.maximum(kmax_h - kmin_h, 1.0),
+                    0.0, 1.0) * pmax_h
+    mark = mark * ecn_mask
+    ecn = 1.0 - jnp.prod(1.0 - mark, axis=1)
+    util_l = tx_d / caps + q_d / (caps * t_base_util)
+    util = jnp.max(jnp.where(hopmask, util_l, 0.0), axis=1)
+    sig = Signals(ecn=ecn, rtt=rtt, util=util,
+                  t=jnp.asarray(t, jnp.float32), dt=jnp.float32(dt),
+                  line=line, base_rtt=base_rtt, loss=loss)
+    st2, rate, win = policy.update(dict(policy.params, **(params or {})),
+                                   state, sig)
+    F = line.shape[0]
+    return (st2, jnp.broadcast_to(rate, (F,)), jnp.broadcast_to(win, (F,)))
+
+
+def segment_reduce_ref(vals, idx, n_out: int, C: int):
+    """``engine._reduce``'s "gather" strategy verbatim."""
+    rows = vals.at[idx].get(mode="fill", fill_value=0.0)
+    return rows.reshape(n_out, C).sum(axis=1)
+
+
+def segment_reduce_pfc_ref(vals, idx, n_out: int, C: int, xoff, xon,
+                           can_pause, prev_paused):
+    """Gather reduction + the engine's PFC hysteresis (stages 6-7)."""
+    q = segment_reduce_ref(vals, idx, n_out, C)
+    over = (q > xoff) & can_pause
+    under = q < xon
+    paused = jnp.where(over, True, jnp.where(under, False, prev_paused))
+    return q, paused

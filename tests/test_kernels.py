@@ -13,6 +13,8 @@ from repro.kernels.embedding_bag.ref import embedding_bag_stacked_ref
 from repro.kernels.flash_decode.ops import gqa_decode_attention
 from repro.kernels.flash_decode.ref import flash_decode_ref
 
+pytestmark = pytest.mark.kernel
+
 
 # ---------------------------------------------------------------- embedding
 @pytest.mark.parametrize("T,R,D,B,P", [(2, 16, 64, 2, 3), (4, 64, 64, 3, 60),

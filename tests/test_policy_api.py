@@ -286,20 +286,28 @@ def test_stacked_policy_serial_run_selects_member():
 
 
 def test_batch_pays_off_heuristics():
-    """CPU: same-policy param sweeps batch below the measured flow
-    crossover; the stacked policy axis (switch runs every branch under
-    vmap) batches only off-CPU (BENCH_engine.json policy_axis)."""
+    """CPU defaults: same-policy param sweeps batch below the measured
+    flow crossover (DEFAULT_CROSSOVERS); the stacked policy axis (switch
+    runs every branch under vmap) batches only off-CPU (BENCH_engine.json
+    policy_axis)."""
     import jax
+
+    from repro.core import sweep as sweep_mod
     topo, sched = _tiny_case()
     runner = SweepRunner(CFG)
-    if jax.default_backend() == "cpu":
-        assert runner.batch_pays_off(sched)          # 7 flows
-        big = type("S", (), {"n_flows": SweepRunner.CPU_BATCH_FLOWS + 1})()
-        assert not runner.batch_pays_off(big)
-        assert not runner.policy_axis_pays_off()
-    else:
-        assert runner.batch_pays_off(sched)
-        assert runner.policy_axis_pays_off()
+    sweep_mod.reset_calibration()
+    try:
+        if jax.default_backend() == "cpu":
+            assert runner.batch_pays_off(sched)          # 7 flows
+            thr = sweep_mod.DEFAULT_CROSSOVERS["cpu"]["sweep"]
+            big = type("S", (), {"n_flows": int(thr) + 1})()
+            assert not runner.batch_pays_off(big)
+            assert not runner.policy_axis_pays_off()
+        else:
+            assert runner.batch_pays_off(sched)
+            assert runner.policy_axis_pays_off()
+    finally:
+        sweep_mod.reset_calibration()
 
 
 def test_readme_policy_table_in_sync():
