@@ -1,0 +1,172 @@
+"""Policy x tuned-param x fabric atlas slices through the sharded path.
+
+The regime atlas the ROADMAP calls for, one committed slice at a time:
+for each CC policy, a key tuning parameter (spanned around its paper
+default) is crossed with a fig-12-style fabric grid — paired ECN ramps
+(kmin, 4*kmin) x PFC thresholds (xoff) — on the paper's CLOS topology,
+every (policy, param, fabric) cell one lane of a sharded
+``SweepRunner(mesh="auto")`` dispatch.  Emits one CSV row per cell plus a
+JSON sidecar with the wall-clock/scaling record.
+
+Usage (the committed ``experiments/atlas/`` slice):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+    REPRO_BENCH_SCALE=paper \\
+    PYTHONPATH=src python benchmarks/atlas.py
+
+``REPRO_BENCH_SCALE=small`` gives a CI-sized smoke of the same shape.
+The workload is the topology-aware ring All-Reduce (tractable at 128
+ranks on a single-core host, unlike the 1D algorithm's ~130k flows at
+O(ranks^2)); completion times are end-of-collective, lane health is
+recorded per cell (an 'exhausted'/'diverged' cell is a truncation
+artifact, not a measurement).
+"""
+from __future__ import annotations
+
+import csv
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+try:                             # run.py imports us as benchmarks.*;
+    from benchmarks.common import SCALE, collective_size, paper_fabric
+except ImportError:              # direct script run: sys.path[0]=benchmarks/
+    from common import SCALE, collective_size, paper_fabric
+
+from repro.common.cache import enable_compilation_cache
+from repro.core.cc import get_policy
+from repro.core.collectives import allreduce_ring
+from repro.core.engine import EngineConfig
+from repro.core.sweep import SweepRunner
+
+OUTDIR = os.environ.get("REPRO_ATLAS_OUT", "experiments/atlas")
+
+# one key tunable per policy, spanned geometrically around the paper
+# default (x0.5, x1, x2) — the Hoefler/Mittal sensitivity question in
+# miniature: does the fabric-tuning ranking survive the policy's own
+# tuning?  Defaults from the declared ParamSpec tables.
+KEY_PARAM = {"dcqcn": "rai_frac", "hpcc": "eta", "timely": "beta"}
+PARAM_SPAN = (0.5, 1.0, 2.0)
+
+# fig-12-style paired ECN ramps x PFC thresholds (not a kmin x kmax
+# factorial, which would include inverted ramps)
+FABRIC_PTS = [(k, 4.0 * k, x)
+              for k in (100e3, 1000e3)
+              for x in (0.25e6, 4e6)]
+
+
+def atlas_cfg() -> EngineConfig:
+    if SCALE == "small":
+        return EngineConfig(dt=2e-6, max_steps=4000, max_extends=6,
+                            queue_stride=0)
+    return EngineConfig(dt=4e-6, max_steps=6000, max_extends=6,
+                        queue_stride=0)
+
+
+def policy_slice(runner: SweepRunner, topo, sched, pol: str) -> dict:
+    """One sharded dispatch: key-param span x fabric grid for ``pol``."""
+    policy = get_policy(pol)
+    key = KEY_PARAM[pol]
+    spec = policy.param_spec(key)
+    vals = [min(max(spec.default * s, spec.lo), spec.hi)
+            for s in PARAM_SPAN]
+    lanes = [(v, f) for v in vals for f in FABRIC_PTS]
+    pts = np.asarray([f for _, f in lanes], np.float32)
+    t0 = time.time()
+    batch = runner.run_batch(
+        topo, sched, policy,
+        {key: np.asarray([v for v, _ in lanes], np.float32)},
+        stacked_fabric={"kmin": pts[:, 0], "kmax": pts[:, 1],
+                        "xoff": pts[:, 2]})
+    wall = time.time() - t0
+    rows = []
+    status = batch.lane_status()
+    for i in range(batch.n):
+        rows.append({
+            "policy": pol, "param": key,
+            "param_value": float(batch.params[key][i]),
+            "param_rel_default": round(float(batch.params[key][i])
+                                       / spec.default, 3),
+            "kmin": float(batch.fabric["kmin"][i]),
+            "kmax": float(batch.fabric["kmax"][i]),
+            "xoff": float(batch.fabric["xoff"][i]),
+            "completion_ms": round(float(batch.completion_time[i]) * 1e3, 4),
+            "pfc_frames": int(batch.pause_count[i].sum()),
+            "lane_status": status[i],
+        })
+    fin = batch.finished
+    out = {"rows": rows, "wall_s": round(wall, 1), "n_lanes": batch.n,
+           "n_unfinished": int((~fin).sum())}
+    if fin.any():
+        best = batch.best()
+        out["best"] = {
+            "completion_ms": round(
+                float(batch.completion_time[best]) * 1e3, 4),
+            "param_value": float(batch.params[key][best]),
+            "kmin": float(batch.fabric["kmin"][best]),
+            "xoff": float(batch.fabric["xoff"][best])}
+        out["spread_pct"] = round(float(
+            (batch.completion_time[fin].max()
+             / batch.completion_time[fin].min() - 1) * 100), 2)
+    return out
+
+
+def main():
+    enable_compilation_cache()
+    fab = paper_fabric()
+    topo = fab.build()
+    # n_chunks=1: 2*(R-1)*R flows (~32.5k at 128 ranks) instead of 4x
+    # that — the chunking controls pipelining depth, not bytes moved
+    sched = allreduce_ring(topo, list(range(fab.n_gpus)), collective_size(),
+                           n_chunks=1)
+    cfg = atlas_cfg()
+    runner = SweepRunner(cfg, mesh="auto")
+    n_dev = runner.n_mesh_devices
+    print(f"atlas: scale={SCALE} gpus={fab.n_gpus} flows={sched.n_flows} "
+          f"devices={n_dev} mesh={runner.mesh}")
+    os.makedirs(OUTDIR, exist_ok=True)
+    t00 = time.time()
+    all_rows, meta = [], {}
+    for pol in KEY_PARAM:
+        s = policy_slice(runner, topo, sched, pol)
+        all_rows += s["rows"]
+        meta[pol] = {k: v for k, v in s.items() if k != "rows"}
+        best = s.get("best", {}).get("completion_ms", "n/a")
+        print(f"  {pol:8s} B={s['n_lanes']} wall {s['wall_s']}s "
+              f"best {best}ms spread {s.get('spread_pct', 'n/a')}% "
+              f"unfinished {s['n_unfinished']}")
+    total = time.time() - t00
+    tag = f"{SCALE}_ring{fab.n_gpus}"
+    csv_path = os.path.join(OUTDIR, f"atlas_{tag}.csv")
+    with open(csv_path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(all_rows[0]))
+        w.writeheader()
+        w.writerows(all_rows)
+    side = {
+        "scale": SCALE, "n_gpus": fab.n_gpus, "n_flows": sched.n_flows,
+        "workload": f"allreduce_ring {collective_size()/1e6:.0f}MB",
+        "cfg": {"dt": cfg.dt, "max_steps": cfg.max_steps,
+                "max_extends": cfg.max_extends},
+        "backend": jax.default_backend(), "devices": n_dev,
+        "mesh_shape": ({runner.mesh.axis_names[0]: n_dev}
+                       if runner.mesh is not None else None),
+        "sharded": runner.mesh is not None,
+        "total_wall_s": round(total, 1),
+        "cells": len(all_rows),
+        "per_policy": meta,
+        "note": "emulated host devices share one core: the sharded "
+                "dispatch here validates placement/equivalence at paper "
+                "scale, wall-clock parallel speedup needs real devices "
+                "(BENCH_engine.json 'sharded' records measured "
+                "efficiency)",
+    }
+    with open(os.path.join(OUTDIR, f"atlas_{tag}.json"), "w") as f:
+        json.dump(side, f, indent=1)
+    print(f"wrote {csv_path} ({len(all_rows)} cells) in {total:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

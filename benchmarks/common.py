@@ -63,8 +63,11 @@ def engine_cfg(dt=2e-6, steps=4000, queue_stride=1):
 
 
 # one shared runner: same-shaped scenarios (all the per-policy loops, and
-# schedules rebuilt per figure) reuse compiled engines instead of retracing
-RUNNER = SweepRunner()
+# schedules rebuilt per figure) reuse compiled engines instead of
+# retracing.  mesh="auto" lays grid/policy-axis dispatches over all local
+# devices when more than one is visible (sharded transparently; on a
+# single device this is exactly the historical vmap path)
+RUNNER = SweepRunner(mesh="auto")
 
 
 def run_cached(tag: str, spec: ScenarioSpec, cfg: EngineConfig) -> Results:

@@ -11,7 +11,9 @@ import traceback
 def main() -> None:
     from benchmarks import figures
     from benchmarks.common import emit
+    from repro.common.cache import enable_compilation_cache
 
+    enable_compilation_cache()   # repeat runs skip the XLA cold compiles
     t00 = time.time()
     print("figure,metric,policy,value")
     for fn in (figures.fig3_incast,

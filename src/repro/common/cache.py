@@ -1,0 +1,53 @@
+"""Warm-start caches shared by the benchmark/figure drivers.
+
+The JAX persistent compilation cache keeps XLA executables on disk, so a
+fresh process re-running an already-compiled sweep (the 21 s policy-axis
+cold compile, the 3.3 s headline) loads the binary instead of
+recompiling.  ``enable_compilation_cache()`` points the process at
+``$REPRO_CACHE_DIR/jax_compilation`` (default ``.cache/jax_compilation``
+— the same root ``repro.core.sweep`` uses for persisted backend
+calibrations); CI caches the directory between runs.  Disable with
+``REPRO_COMPILATION_CACHE=0``.
+"""
+from __future__ import annotations
+
+import os
+
+
+def default_cache_dir() -> str:
+    return os.path.join(os.environ.get("REPRO_CACHE_DIR", ".cache"),
+                        "jax_compilation")
+
+
+def enable_compilation_cache(cache_dir: str | None = None,
+                             min_compile_secs: float = 0.2) -> str | None:
+    """Enable the JAX persistent compilation cache at ``cache_dir``.
+
+    Returns the directory in use, or None when disabled
+    (``REPRO_COMPILATION_CACHE=0``) or unavailable (unwritable dir, jax
+    without the config knob).  Safe to call more than once; the last
+    directory wins.  ``min_compile_secs`` skips persisting trivial
+    compiles so the cache holds the executables worth warm-starting.
+    """
+    if os.environ.get("REPRO_COMPILATION_CACHE", "1") == "0":
+        return None
+    import jax
+    cache_dir = cache_dir or default_cache_dir()
+    try:
+        os.makedirs(cache_dir, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs",
+                          float(min_compile_secs))
+    except (OSError, AttributeError, ValueError):
+        return None
+    return cache_dir
+
+
+def compilation_cache_entries(cache_dir: str | None = None) -> int:
+    """Number of persisted executables currently in the cache dir."""
+    cache_dir = cache_dir or default_cache_dir()
+    try:
+        return sum(1 for n in os.listdir(cache_dir)
+                   if not n.startswith("."))
+    except OSError:
+        return 0

@@ -135,3 +135,59 @@ def shard_tree(tree_specs, mesh: Mesh):
         tree_specs,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+# ---------------------------------------------------------------------------
+# 1-D grid meshes for sharded sweep execution (repro.core.sweep)
+# ---------------------------------------------------------------------------
+
+GRID_AXIS = "grid"
+
+
+def grid_mesh(n_devices: int | None = None, axis: str = GRID_AXIS,
+              devices=None) -> Mesh | None:
+    """A 1-D mesh over local devices for laying out a sweep's grid axis.
+
+    Returns ``None`` when fewer than two devices are available (callers
+    fall back to the single-device vmap path).  On a CPU-only host, JAX
+    emulates a multi-device platform under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — the testing
+    recipe for the sharded sweep path.
+    """
+    devices = list(devices if devices is not None else jax.devices())
+    n = len(devices) if n_devices is None else int(n_devices)
+    if n > len(devices):
+        raise ValueError(f"grid_mesh wants {n} devices but only "
+                         f"{len(devices)} are available")
+    if n < 2:
+        return None
+    import numpy as np
+    return Mesh(np.asarray(devices[:n]), (axis,))
+
+
+def resolve_grid_mesh(mesh, axis: str = GRID_AXIS) -> Mesh | None:
+    """Normalize a user-facing mesh argument to a 1-D ``Mesh`` or ``None``.
+
+    Accepts ``None`` (single-device), ``"auto"`` (all local devices, or
+    ``None`` when only one exists), an int device count, or a prebuilt
+    1-D ``Mesh``."""
+    if mesh is None:
+        return None
+    if isinstance(mesh, Mesh):
+        if len(mesh.axis_names) != 1:
+            raise ValueError("sweep sharding wants a 1-D mesh (one grid "
+                             f"axis); got axes {mesh.axis_names}")
+        return mesh if _mesh_size(mesh) > 1 else None
+    if mesh == "auto":
+        return grid_mesh(axis=axis)
+    if isinstance(mesh, int):
+        return grid_mesh(mesh, axis=axis)
+    raise TypeError(f"mesh must be None, 'auto', an int device count or a "
+                    f"jax.sharding.Mesh; got {type(mesh).__name__}")
+
+
+def _mesh_size(mesh: Mesh) -> int:
+    n = 1
+    for a in mesh.axis_names:
+        n *= int(mesh.shape[a])
+    return n

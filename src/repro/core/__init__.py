@@ -44,9 +44,14 @@ from repro.core.scenario import (  # noqa: F401
     scenario_matrix,
 )
 from repro.core.sweep import (  # noqa: F401
+    BackendCalibration,
     BatchResults,
     SweepRunner,
+    calibrate_backend,
     compile_stats,
+    get_calibration,
     grid_from_spec,
+    load_calibration,
+    save_calibration,
 )
 from repro.core.topology import LINK_CLASSES, clos, single_switch  # noqa: F401

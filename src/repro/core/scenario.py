@@ -32,7 +32,7 @@ from typing import Callable
 
 from repro.core.cc import get_policy, stack_policies
 from repro.core.collectives import Schedule, get_collective, incast
-from repro.core.engine import EngineConfig, FabricParams, Results
+from repro.core.engine import EngineConfig, FabricParams
 from repro.core.topology import (NIC_BW, NIC_LAT, NVLINK_BW, NVLINK_LAT,
                                  SWITCH_BUF, Topology)
 from repro.core import topology as topo_mod
@@ -221,10 +221,16 @@ class ScenarioSpec:
             pol = self.policy
         return topo, sched, pol
 
-    def run(self, runner=None, cfg: EngineConfig | None = None) -> Results:
-        """Simulate this spec (convenience; prefer a shared SweepRunner)."""
+    def run(self, runner=None, cfg: EngineConfig | None = None):
+        """Simulate this spec (convenience; prefer a shared SweepRunner).
+        A tuple-policy spec (``scenario_matrix(stacked=True)``) runs its
+        whole policy axis as one batched — and, when the runner has a
+        device mesh, sharded — dispatch and returns ``BatchResults``
+        instead of ``Results``."""
         from repro.core.sweep import SweepRunner
         runner = runner or SweepRunner(cfg)
+        if isinstance(self.policy, (tuple, list)):
+            return runner.grid_spec(self, cfg=cfg)
         return runner.run_spec(self, cfg=cfg)
 
 

@@ -25,7 +25,20 @@ one executable per ``(policy logic, EngineConfig, static plan)``.
   are a single compiled call with zero recompiles after warmup;
 * **spec-driven grids** — ``grid_from_spec(policy, n_points)`` generates
   grid axes from each policy's declared ``ParamSpec`` ranges (log/linear
-  spacing, integer rounding) instead of hand-picked value lists.
+  spacing, integer rounding) instead of hand-picked value lists;
+* **sharded grid scale-out** — ``SweepRunner(mesh="auto")`` lays the
+  grid/batch axis over a 1-D device mesh (``shard_map`` on top of the
+  per-lane vmap; lanes are embarrassingly parallel, so a B-lane grid
+  costs ~B/n_devices lane-times) with round-robin lane placement,
+  edge-repeat padding for non-divisible grids (masked back out of
+  ``BatchResults``), and streamed fixed-size chunking for grids larger
+  than device memory (chunk i+1 dispatches before chunk i's results are
+  pulled to host; per-device working set is bounded by
+  ``lane_state_bytes x chunk/n_devices`` regardless of grid size).  On a
+  CPU-only host, test with
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.  The sharded
+  and vmap paths are allclose-equivalent (rtol 1e-5); ``mesh=None``
+  (the default) is bitwise the historical path.
 
 Batched runs never record the per-device queue timeline (it is a
 per-member ``(T, D)`` buffer); use a plain ``run`` for Fig 5-7 style plots.
@@ -54,11 +67,17 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import json
+import os
+import time
 import warnings
 
 import jax
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec
 
+from repro.common.sharding import resolve_grid_mesh
 from repro.core import cc as cc_mod
 from repro.core.cc import Policy, stack_policies
 from repro.core.engine import (EngineConfig, FabricParams, Results, Simulator,
@@ -157,6 +176,29 @@ class BatchResults:
 
 
 _BATCH_CACHE: dict = {}
+_SHARD_CACHE: dict = {}
+
+
+def _one_lane(policy: Policy, cfg: EngineConfig, plan, faulty: bool):
+    """The per-lane body both batch paths vmap over: build a fresh carry,
+    run the jitted stepping loop (which donates it internally) and keep
+    only the per-lane finals."""
+    run = _make_run(policy, cfg, plan, early_exit=True, faulty=faulty)
+
+    def one(pp, params, fab, flt):
+        carry = _init_carry(pp, plan, policy, cfg, params, faulty)
+        carry, steps = run(carry, pp, params, fab, flt)
+        out = {"t_finish": carry["t_finish"], "done": carry["done"],
+               "pause_count": carry["pause_count"],
+               "delivered": carry["delivered"], "soft": carry["soft"],
+               "steps": steps, "diverged": carry["diverged"],
+               "deadlock_step": carry["deadlock_step"],
+               "storm_step": carry["storm_step"]}
+        if faulty:
+            out["lost"] = carry["lost"]
+        return out
+
+    return one
 
 
 def _compiled_batch(policy: Policy, cfg: EngineConfig, plan,
@@ -167,23 +209,37 @@ def _compiled_batch(policy: Policy, cfg: EngineConfig, plan,
     out of the key; ``faulty`` keys the fault-injection compile path)."""
     key = (_policy_cache_key(policy), _cfg_static(cfg), plan, faulty)
     if key not in _BATCH_CACHE:
-        run = _make_run(policy, cfg, plan, early_exit=True, faulty=faulty)
-
-        def one(pp, params, fab, flt):
-            carry = _init_carry(pp, plan, policy, cfg, params, faulty)
-            carry, steps = run(carry, pp, params, fab, flt)
-            out = {"t_finish": carry["t_finish"], "done": carry["done"],
-                   "pause_count": carry["pause_count"],
-                   "delivered": carry["delivered"], "soft": carry["soft"],
-                   "steps": steps, "diverged": carry["diverged"],
-                   "deadlock_step": carry["deadlock_step"],
-                   "storm_step": carry["storm_step"]}
-            if faulty:
-                out["lost"] = carry["lost"]
-            return out
-
+        one = _one_lane(policy, cfg, plan, faulty)
         _BATCH_CACHE[key] = jax.jit(jax.vmap(one, in_axes=(None, 0, 0, 0)))
     return _BATCH_CACHE[key]
+
+
+def _mesh_key(mesh):
+    return (tuple(mesh.axis_names),
+            tuple(d.id for d in np.asarray(mesh.devices).reshape(-1)))
+
+
+def _compiled_sharded_batch(policy: Policy, cfg: EngineConfig, plan,
+                            faulty: bool, mesh):
+    """The vmapped batch laid over a 1-D device mesh via ``shard_map``:
+    each device runs the per-lane vmap over its local block of lanes (the
+    lanes are embarrassingly parallel — no cross-device collectives), so a
+    B-lane grid costs ~B/n_devices lane-times of wall clock.  The lane
+    axis of every stacked input/output is sharded on the mesh's grid
+    axis; ``pp`` (the prepared scenario) is replicated.  Cached alongside
+    ``_BATCH_CACHE`` with the mesh identity in the key."""
+    key = (_policy_cache_key(policy), _cfg_static(cfg), plan, faulty,
+           _mesh_key(mesh))
+    if key not in _SHARD_CACHE:
+        one = _one_lane(policy, cfg, plan, faulty)
+        vm = jax.vmap(one, in_axes=(None, 0, 0, 0))
+        axis = mesh.axis_names[0]
+        lanes = PartitionSpec(axis)
+        sharded = shard_map(vm, mesh=mesh,
+                            in_specs=(PartitionSpec(), lanes, lanes, lanes),
+                            out_specs=lanes, check_rep=False)
+        _SHARD_CACHE[key] = jax.jit(sharded)
+    return _SHARD_CACHE[key]
 
 
 def compile_stats() -> dict:
@@ -197,8 +253,10 @@ def compile_stats() -> dict:
     return {
         "run_cache": len(engine_mod._RUN_CACHE),
         "batch_cache": len(_BATCH_CACHE),
+        "shard_cache": len(_SHARD_CACHE),
         "compiled_executables": n_exec(engine_mod._RUN_CACHE.values())
-        + n_exec(_BATCH_CACHE.values()),
+        + n_exec(_BATCH_CACHE.values())
+        + n_exec(_SHARD_CACHE.values()),
     }
 
 
@@ -286,12 +344,14 @@ _INF = float("inf")
 # Fallback crossover tables (largest n_flows at which the batched path
 # still wins wall-clock) used before any measurement has run on a backend.
 # "sweep" = same-policy vmapped parameter sweep vs a serial loop;
-# "policy_axis" = stacked lax.switch product policy vs per-policy runs.
-# CPU numbers are from BENCH_engine.json on the dev container (the sweep
-# wins 4-5x below ~2k flows and loses 0.3x on the 7936-flow All-Reduce;
-# the policy axis loses at every measured CPU scale).  Backends not listed
-# (TPU/GPU) vectorize the batch axis fully, so batching always pays off
-# there (inf).
+# "policy_axis" = stacked lax.switch product policy vs per-policy runs;
+# "sharded" = the shard_map grid layout vs the single-device vmap (only
+# measurable with >1 device; unlisted -> inf, i.e. shard whenever a mesh
+# was configured).  CPU numbers are from BENCH_engine.json on the dev
+# container (the sweep wins 4-5x below ~2k flows and loses 0.3x on the
+# 7936-flow All-Reduce; the policy axis loses at every measured CPU
+# scale).  Backends not listed (TPU/GPU) vectorize the batch axis fully,
+# so batching always pays off there (inf).
 DEFAULT_CROSSOVERS: dict = {
     "cpu": {"sweep": 2048.0, "policy_axis": 0.0},
 }
@@ -330,15 +390,89 @@ class BackendCalibration:
 
 
 _CALIBRATION: dict = {}
+# backends for which the on-disk table must NOT be consulted: either the
+# load was already attempted once, or reset_calibration() pinned the
+# process back to the defaults ("*" = every backend)
+_NO_DISK: set = set()
+
+
+def calibration_cache_path(backend: str | None = None,
+                           cache_dir: str | None = None) -> str:
+    """Where ``calibrate_backend`` persists its measured table
+    (``$REPRO_CACHE_DIR/repro_calibration_<backend>.json``, default
+    ``.cache/``) so fresh processes warm-start instead of re-measuring."""
+    backend = backend or jax.default_backend()
+    cache_dir = cache_dir or os.environ.get("REPRO_CACHE_DIR", ".cache")
+    return os.path.join(cache_dir, f"repro_calibration_{backend}.json")
+
+
+def save_calibration(cal: BackendCalibration,
+                     path: str | None = None) -> str | None:
+    """Persist a measured calibration to disk (JSON; inf encoded).  Best
+    effort: an unwritable cache dir is silently skipped (returns None)."""
+    path = path or calibration_cache_path(cal.backend)
+    rec = cal.record()
+    rec["saved_at"] = time.time()
+    rec["jax"] = jax.__version__
+    rec["n_devices"] = len(jax.devices())
+    try:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    except OSError:
+        return None
+    return path
+
+
+def load_calibration(backend: str | None = None, path: str | None = None,
+                     max_age_days: float | None = None
+                     ) -> BackendCalibration | None:
+    """Load a persisted calibration, or None when absent/stale/invalid.
+
+    A table is rejected when it was measured under a different jax
+    version or device count (both change the crossover), or — with
+    ``max_age_days`` — when older than that."""
+    backend = backend or jax.default_backend()
+    path = path or calibration_cache_path(backend)
+    try:
+        with open(path) as f:
+            rec = json.load(f)
+    except (OSError, ValueError):
+        return None
+    if rec.get("backend") != backend:
+        return None
+    if rec.get("jax") != jax.__version__:
+        return None
+    if rec.get("n_devices") != len(jax.devices()):
+        return None
+    if max_age_days is not None:
+        age = time.time() - float(rec.get("saved_at", 0.0))
+        if age > max_age_days * 86400.0:
+            return None
+    crossover = {k: (_INF if v == "inf" else float(v))
+                 for k, v in rec.get("crossover", {}).items()}
+    probes = tuple((p["kind"], int(p["n_flows"]), float(p["serial_s"]),
+                    float(p["batched_s"])) for p in rec.get("probes", ()))
+    return BackendCalibration(backend=backend,
+                              source=rec.get("source", "measured"),
+                              crossover=crossover, probes=probes)
 
 
 def get_calibration(backend: str | None = None) -> BackendCalibration:
     """The active crossover table for ``backend`` (default: the running
     JAX backend): the cached ``calibrate_backend`` measurement if one
-    exists, else the ``DEFAULT_CROSSOVERS`` entry (unlisted backends get
-    inf thresholds — batching always on, accelerator behavior)."""
+    exists, else a table persisted to disk by a previous process
+    (``calibration_cache_path``; disable with REPRO_CALIBRATION_CACHE=0),
+    else the ``DEFAULT_CROSSOVERS`` entry (unlisted backends get inf
+    thresholds — batching always on, accelerator behavior)."""
     backend = backend or jax.default_backend()
     cal = _CALIBRATION.get(backend)
+    if (cal is None and "*" not in _NO_DISK and backend not in _NO_DISK
+            and os.environ.get("REPRO_CALIBRATION_CACHE", "1") != "0"):
+        _NO_DISK.add(backend)          # one load attempt per process
+        cal = load_calibration(backend)
+        if cal is not None:
+            _CALIBRATION[backend] = cal
     if cal is None:
         table = dict(DEFAULT_CROSSOVERS.get(
             backend, {"sweep": _INF, "policy_axis": _INF}))
@@ -354,11 +488,15 @@ def set_calibration(cal: BackendCalibration) -> None:
 
 def reset_calibration(backend: str | None = None) -> None:
     """Drop cached calibrations (all backends when ``backend`` is None),
-    reverting ``get_calibration`` to the defaults."""
+    reverting ``get_calibration`` to the defaults — the on-disk table is
+    not reconsulted until the process restarts (tests rely on reset
+    meaning *defaults*, not *whatever a previous bench run persisted*)."""
     if backend is None:
         _CALIBRATION.clear()
+        _NO_DISK.add("*")
     else:
         _CALIBRATION.pop(backend, None)
+        _NO_DISK.add(backend)
 
 
 def _measure_crossover(kind: str, n_flows: int, B: int,
@@ -400,6 +538,24 @@ def _measure_crossover(kind: str, n_flows: int, B: int,
 
         def batched():
             runner.run_policy_axis(topo, sched, pols)
+    elif kind == "sharded":
+        # the shard_map grid layout vs the single-device vmap, same B-lane
+        # sweep on both sides; "serial" here means the un-sharded vmap
+        sharded = SweepRunner(cfg, mesh="auto")
+        if sharded.mesh is None:
+            raise RuntimeError("sharded calibration needs >1 JAX device "
+                               "(emulate: XLA_FLAGS="
+                               "--xla_force_host_platform_device_count=8)")
+        policy = cc_mod.get_policy("dcqcn")
+        Bs = max(B, sharded.n_mesh_devices)
+        scale = np.linspace(0.5, 2.0, Bs).astype(np.float32)
+        stacked = {"rai_frac": 0.03 * scale}
+
+        def serial():
+            runner.run_batch(topo, sched, policy, stacked)
+
+        def batched():
+            sharded.run_batch(topo, sched, policy, stacked)
     else:
         raise ValueError(f"unknown calibration kind: {kind!r}")
 
@@ -414,23 +570,34 @@ def _measure_crossover(kind: str, n_flows: int, B: int,
 
 def calibrate_backend(probe_flows=(90, 1806), B: int = 6,
                       cfg: EngineConfig | None = None,
-                      kinds=("sweep", "policy_axis"),
+                      kinds=None,
                       backend: str | None = None,
+                      persist: bool = True,
                       _measure=None) -> BackendCalibration:
     """Measure the serial-vs-batched wall-clock crossover on the running
     backend and cache it; ``SweepRunner.batch_pays_off`` /
-    ``policy_axis_pays_off`` consult the cached table from then on.
+    ``policy_axis_pays_off`` / ``sharded_pays_off`` consult the cached
+    table from then on.
 
     For each ``kind`` the batched path is timed against the serial loop at
     each probe size; the crossover is the geometric mean of the largest
     winning and smallest losing probe (all probes win -> inf, all lose ->
-    0.0).  ``_measure(kind, n_flows, B, cfg)`` is injectable for tests and
+    0.0).  ``kinds=None`` probes "sweep" and "policy_axis", plus "sharded"
+    (shard_map grid layout vs single-device vmap) when more than one JAX
+    device is visible.  The measured table is persisted to
+    ``calibration_cache_path()`` (``persist=False`` to skip) so later
+    processes warm-start via ``get_calibration`` instead of re-measuring.
+    ``_measure(kind, n_flows, B, cfg)`` is injectable for tests and
     deterministic benchmarks; ``BackendCalibration.record()`` gives the
     JSON form ``benchmarks/bench_engine.py`` writes to BENCH_engine.json.
     """
     backend = backend or jax.default_backend()
     cfg = cfg or EngineConfig(dt=2e-6, max_steps=600, max_extends=1,
                               queue_stride=0)
+    if kinds is None:
+        kinds = ("sweep", "policy_axis")
+        if len(jax.devices()) > 1:
+            kinds += ("sharded",)
     measure = _measure or _measure_crossover
     probes, table = [], {}
     for kind in kinds:
@@ -448,6 +615,8 @@ def calibrate_backend(probe_flows=(90, 1806), B: int = 6,
     cal = BackendCalibration(backend=backend, source="measured",
                              crossover=table, probes=tuple(probes))
     set_calibration(cal)
+    if persist and _measure is None:    # injected probes are synthetic —
+        save_calibration(cal)           # never persist them to disk
     return cal
 
 
@@ -465,10 +634,42 @@ class SweepRunner:
     # engine's global cache and survive eviction
     MAX_SIMS = 64
 
-    def __init__(self, cfg: EngineConfig | None = None, bucket: bool = True):
+    # chunk_lanes="auto": stream grids bigger than this many lanes per
+    # device in fixed-size chunks (per-device working set stays bounded
+    # regardless of grid size)
+    AUTO_CHUNK_PER_DEVICE = 256
+
+    def __init__(self, cfg: EngineConfig | None = None, bucket: bool = True,
+                 mesh=None, chunk_lanes: int | str | None = "auto"):
         self.cfg = cfg or EngineConfig()
         self.bucket = bucket
         self._sims: dict = {}
+        # mesh=None -> single-device vmap (the historical path, bitwise
+        # unchanged); "auto" -> all local devices when >1; int/Mesh -> as
+        # given.  See resolve_grid_mesh.
+        self.mesh = resolve_grid_mesh(mesh)
+        self.chunk_lanes = chunk_lanes
+
+    @property
+    def n_mesh_devices(self) -> int:
+        """Devices the grid axis is laid over (1 == un-sharded vmap)."""
+        if self.mesh is None:
+            return 1
+        return int(np.asarray(self.mesh.devices).size)
+
+    def _chunk_size(self, B: int) -> int:
+        """Lanes per dispatched chunk: a multiple of the mesh size, ``B``
+        itself (padded up) when no chunking applies."""
+        n_dev = self.n_mesh_devices
+        pad_to = -(-B // n_dev) * n_dev                   # ceil to mesh
+        if self.chunk_lanes in (None, 0):
+            return pad_to
+        if self.chunk_lanes == "auto":
+            limit = self.AUTO_CHUNK_PER_DEVICE * n_dev
+        else:
+            limit = max(int(self.chunk_lanes), 1)
+            limit = -(-limit // n_dev) * n_dev            # ceil to mesh
+        return min(pad_to, limit)
 
     @staticmethod
     def _scenario_key(topo, sched):
@@ -545,6 +746,39 @@ class SweepRunner:
         return get_calibration().pays_off(
             "policy_axis", None if sched is None else sched.n_flows)
 
+    def sharded_pays_off(self, sched=None) -> bool:
+        """Would laying the grid axis over the device mesh beat one
+        device's vmap?  Trivially False without a mesh; otherwise decided
+        from the backend crossover table (kind ``"sharded"``, default:
+        always — real multi-device backends parallelize lanes).  Like
+        ``batch_pays_off`` this is *advice for drivers* deciding whether
+        to construct a runner with a mesh; ``run_batch`` itself never
+        second-guesses an explicitly configured mesh (the emulated-device
+        testing recipe depends on that).  Wall-clock choice only: both
+        paths are allclose-equivalent."""
+        if self.mesh is None:
+            return False
+        return get_calibration().pays_off(
+            "sharded", None if sched is None else sched.n_flows)
+
+    def lane_state_bytes(self, topo, sched, policy: Policy | str,
+                         cfg: EngineConfig | None = None,
+                         faulty: bool = False) -> int:
+        """Device bytes one sweep lane's stepping carry occupies (via
+        ``jax.eval_shape`` — nothing is allocated).  The chunked-streaming
+        memory bound per device is ``chunk_size / n_devices * lane_state_bytes``
+        plus the replicated scenario, independent of total grid size."""
+        policy = _resolve(policy)
+        cfg = dataclasses.replace(cfg or self.cfg, queue_stride=0)
+        sim = self.simulator(topo, sched, policy, cfg)
+        params = {k: np.float32(v) for k, v in policy.params.items()}
+        shapes = jax.eval_shape(
+            lambda pp, par: _init_carry(pp, sim.plan, policy, cfg, par,
+                                        faulty),
+            sim.pp, params)
+        return int(sum(np.prod(s.shape) * s.dtype.itemsize
+                       for s in jax.tree.leaves(shapes)))
+
     # -- the batched policy axis --------------------------------------------
     def run_policy_axis(self, topo, sched, policies=None,
                         cc_overrides: list | None = None,
@@ -612,10 +846,15 @@ class SweepRunner:
                         fabric_params=spec.fabric_params,
                         fault_spec=spec.fault_spec)
 
-    def run_specs(self, specs, cfg: EngineConfig | None = None) -> list[Results]:
+    def run_specs(self, specs, cfg: EngineConfig | None = None) -> list:
         """Simulate a list of ``ScenarioSpec``s; same-shaped specs share
-        compiled engines via the shape-bucketed scenario cache."""
-        return [self.run_spec(s, cfg=cfg) for s in specs]
+        compiled engines via the shape-bucketed scenario cache.  A
+        tuple-policy spec (``scenario_matrix(stacked=True)``) runs its
+        policy axis as one batched — and, with a mesh, sharded — dispatch
+        and contributes a ``BatchResults`` entry instead of ``Results``."""
+        return [self.grid_spec(s, cfg=cfg)
+                if isinstance(s.policy, (tuple, list))
+                else self.run_spec(s, cfg=cfg) for s in specs]
 
     def grid_spec(self, spec, param_grid: dict | None = None,
                   fabric_grid: dict | None = None,
@@ -642,6 +881,86 @@ class SweepRunner:
                          fault_spec=spec.fault_spec)
 
     # -- batched parameter sweeps -------------------------------------------
+    def _dispatch_lanes(self, policy: Policy, cfg: EngineConfig, sim,
+                        full: dict, fab: FabricParams, flt: FaultSpec,
+                        faulty: bool, B: int) -> dict:
+        """Dispatch B stacked lanes, gather stacked finals to host numpy.
+
+        Un-sharded (``mesh=None``) and fitting one chunk, this is exactly
+        the historical single-dispatch vmap — bitwise unchanged.  With a
+        mesh, the lane axis is laid over the devices via ``shard_map``
+        with ROUND-ROBIN lane placement: grid lanes arrive sorted along
+        sweep axes, so blocks of consecutive lanes share a regime and
+        block placement would pile a slow region onto one device; the
+        round-robin permutation interleaves them (lane i -> device
+        i % n_dev), then the inverse permutation restores input order on
+        the way out.  Grids larger than one chunk stream: chunk i+1 is
+        dispatched (JAX dispatch is async) before chunk i's buffers are
+        pulled to host, overlapping transfer with compute, and only one
+        chunk of lane state lives on the devices at a time
+        (``lane_state_bytes`` x chunk/n_dev per device).  The trailing
+        chunk is padded by edge-repeating the final lane — inert work
+        whose results are dropped before returning, so callers always see
+        exactly B lanes in input order.
+        """
+        # an explicitly configured mesh is an explicit choice: it is used
+        # unconditionally (the emulated-device testing recipe depends on
+        # that).  sharded_pays_off is *advice for drivers* deciding
+        # whether to construct a mesh, mirroring batch_pays_off — run_batch
+        # never second-guesses its caller.
+        lanes = (full, fab, flt)
+        if self.mesh is None:
+            fn = _compiled_batch(policy, cfg, sim.plan, faulty)
+            chunk = self._chunk_size(B)
+            if chunk >= B:                        # one dispatch, no padding
+                out = fn(sim.pp, *lanes)
+                return jax.tree.map(np.asarray, out)
+            parts, pending = [], None
+            for lo in range(0, B, chunk):
+                hi = min(lo + chunk, B)
+                take = np.arange(lo, hi)
+                if hi - lo < chunk:               # edge-repeat trailing pad
+                    take = np.concatenate(
+                        [take, np.full(chunk - (hi - lo), hi - 1)])
+                got = fn(sim.pp, *jax.tree.map(lambda a: a[take], lanes))
+                if pending is not None:
+                    lo0, hi0, out0 = pending
+                    parts.append(jax.tree.map(
+                        lambda a: np.asarray(a)[:hi0 - lo0], out0))
+                pending = (lo, hi, got)
+            lo0, hi0, out0 = pending
+            parts.append(jax.tree.map(
+                lambda a: np.asarray(a)[:hi0 - lo0], out0))
+            return jax.tree.map(
+                lambda *xs: np.concatenate(xs, axis=0), *parts)
+        n_dev = self.n_mesh_devices
+        chunk = self._chunk_size(B)
+        fn = _compiled_sharded_batch(policy, cfg, sim.plan, faulty,
+                                     self.mesh)
+        # within a chunk: permute so block-sharding over the mesh assigns
+        # device d the round-robin lanes {d, d+n_dev, ...}; inv undoes it
+        order = np.arange(chunk).reshape(-1, n_dev).T.reshape(-1)
+        inv = np.argsort(order)
+        parts, pending = [], None
+        for lo in range(0, B, chunk):
+            hi = min(lo + chunk, B)
+            take = np.arange(lo, hi)
+            if hi - lo < chunk:                   # edge-repeat trailing pad
+                take = np.concatenate(
+                    [take, np.full(chunk - (hi - lo), hi - 1)])
+            got = fn(sim.pp, *jax.tree.map(lambda a: a[take[order]], lanes))
+            if pending is not None:               # stream: gather the chunk
+                lo0, hi0, out0 = pending          # dispatched *last* round
+                parts.append(jax.tree.map(
+                    lambda a: np.asarray(a)[inv][:hi0 - lo0], out0))
+            pending = (lo, hi, got)
+        lo0, hi0, out0 = pending
+        parts.append(jax.tree.map(
+            lambda a: np.asarray(a)[inv][:hi0 - lo0], out0))
+        if len(parts) == 1:
+            return parts[0]
+        return jax.tree.map(lambda *xs: np.concatenate(xs, axis=0), *parts)
+
     def run_batch(self, topo, sched, policy: Policy | str,
                   stacked_params: dict | None = None,
                   stacked_fabric: dict | None = None,
@@ -692,8 +1011,8 @@ class SweepRunner:
         flt = _stack_fault(_as_fault(fault_spec), stacked_fault, B)
         faulty = is_faulty(flt)
         sim = self.simulator(topo, sched, policy, cfg)
-        out = _compiled_batch(policy, cfg, sim.plan, faulty)(
-            sim.pp, full, fab, flt)
+        out = self._dispatch_lanes(policy, cfg, sim, full, fab, flt,
+                                   faulty, B)
         F = sim.plan.n_flows
         t_fin = np.asarray(out["t_finish"])[:, :F]
         done = np.asarray(out["done"])[:, :F]
