@@ -8,6 +8,12 @@ every (policy, param, fabric) cell one lane of a sharded
 ``SweepRunner(mesh="auto")`` dispatch.  Emits one CSV row per cell plus a
 JSON sidecar with the wall-clock/scaling record.
 
+The learned policy rides the same axes: the ``mlp`` slice spans its
+``out_gain`` (the target-tracking speed — 0.5x/1x/2x the trained
+default) over the identical fabric grid, so the atlas directly answers
+whether the trained policy's ranking survives fabric mistuning the way
+the classical policies' rankings do.
+
 Usage (the committed ``experiments/atlas/`` slice):
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
@@ -48,7 +54,8 @@ OUTDIR = os.environ.get("REPRO_ATLAS_OUT", "experiments/atlas")
 # default (x0.5, x1, x2) — the Hoefler/Mittal sensitivity question in
 # miniature: does the fabric-tuning ranking survive the policy's own
 # tuning?  Defaults from the declared ParamSpec tables.
-KEY_PARAM = {"dcqcn": "rai_frac", "hpcc": "eta", "timely": "beta"}
+KEY_PARAM = {"dcqcn": "rai_frac", "hpcc": "eta", "timely": "beta",
+             "mlp": "out_gain"}
 PARAM_SPAN = (0.5, 1.0, 2.0)
 
 # fig-12-style paired ECN ramps x PFC thresholds (not a kmin x kmax

@@ -5,7 +5,8 @@ Usage:
     PYTHONPATH=src python benchmarks/bench_engine.py [--smoke] [--out PATH]
 
 ``--smoke`` runs one warm repetition of the headline scenario plus the
-fault, step_impl-comparison and backend-calibration smokes (CI-friendly);
+fault, step_impl-comparison, backend-calibration and learned-CC
+training-loop smokes (CI-friendly);
 the full run adds the per-figure scenario timings, a vmap sweep-throughput
 measurement and larger calibration probes.  The measured serial-vs-batched
 crossover table (``sweep.calibrate_backend``) and the analytic engine-step
@@ -407,6 +408,20 @@ def bench_sharded(B: int = 32) -> dict:
     return out
 
 
+def bench_learn(steps: int = 4) -> dict:
+    """Learned-CC training-loop smoke: a few Adam steps of the
+    gradient-through-sim trainer (``repro.learn.train.train_smoke``) on a
+    small incast — asserts the loss actually decreases and records the
+    measured optimizer-step throughput."""
+    from repro.learn.train import train_smoke
+
+    rec = train_smoke(steps=steps)
+    assert rec["loss_decreased"], \
+        f"training smoke did not descend: {rec}"
+    assert rec["nonfinite_steps"] == 0, f"non-finite training step: {rec}"
+    return rec
+
+
 def bench_compilation_cache(smoke: bool = True) -> dict:
     """Cold-vs-warm persistent-compilation-cache timing.
 
@@ -493,6 +508,7 @@ def main():
     report["faults"] = bench_faults()
     report["step_impl"] = bench_step_impl()
     report["calibration"] = bench_calibration(smoke=args.smoke)
+    report["learn"] = bench_learn()
     report["sharded"] = bench_sharded()
     try:                         # run.py imports us as benchmarks.*;
         from benchmarks.roofline import engine_step_roofline

@@ -1,0 +1,95 @@
+"""Train the learned ``mlp`` CC policy and ship its weights.
+
+Runs the gradient-through-sim Adam loop (``repro.learn.train``) over the
+default curriculum, then evaluates the trained policy against every
+classical policy on the held-out ScenarioSpecs (topology scales and a
+fault regime the curriculum never sees).
+
+Artifacts:
+  src/repro/learn/mlp_weights.json       the shipped trained weights
+                                         (``cc.get_policy("mlp")`` loads
+                                         these as the spec defaults)
+  experiments/learn/training_curve.json  per-step loss/grad history
+  experiments/learn/heldout_table.json   held-out comparison vs classical
+  experiments/learn/checkpoint.json      resumable optimizer state
+
+Usage:
+  PYTHONPATH=src python scripts/train_mlp_cc.py [--steps N] [--lr F]
+      [--seed N] [--resume] [--skip-heldout]
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+from repro.learn.train import (TrainConfig, curriculum_default,  # noqa: E402
+                               heldout_default, heldout_eval, train)
+
+OUT_DIR = os.path.join(ROOT, "experiments", "learn")
+WEIGHTS_PATH = os.path.join(ROOT, "src", "repro", "learn",
+                            "mlp_weights.json")
+CKPT_PATH = os.path.join(OUT_DIR, "checkpoint.json")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--lr", type=float, default=0.08)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from experiments/learn/checkpoint.json")
+    ap.add_argument("--skip-heldout", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    cfg = TrainConfig(steps=args.steps, lr=args.lr, seed=args.seed)
+    curriculum = curriculum_default()
+    print(f"curriculum: {[s.name for s, _ in curriculum]}", flush=True)
+
+    t0 = time.time()
+    res = train(cfg, curriculum=curriculum,
+                resume=CKPT_PATH if args.resume else None,
+                checkpoint_path=CKPT_PATH, verbose=True)
+    wall = time.time() - t0
+    print(f"trained {len(res.history)} steps in {wall:.0f}s: "
+          f"loss {res.baseline_loss:.4f} -> {res.final_loss:.4f}",
+          flush=True)
+
+    meta = {"steps": len(res.history), "lr": args.lr, "seed": args.seed,
+            "curriculum": [s.name for s, _ in curriculum],
+            "baseline_loss": res.baseline_loss,
+            "final_loss": res.final_loss,
+            # cumulative across checkpoint resumes, not just this run
+            "train_wall_s": res.wall_s}
+    with open(WEIGHTS_PATH, "w") as f:
+        json.dump({"weights": res.weights, "meta": meta}, f, indent=1)
+    print(f"wrote {WEIGHTS_PATH}", flush=True)
+
+    with open(os.path.join(OUT_DIR, "training_curve.json"), "w") as f:
+        json.dump({"config": meta, "history": res.history,
+                   "baselines": res.baselines}, f, indent=1)
+
+    if args.skip_heldout:
+        return
+
+    print("held-out evaluation (unseen scales + gbn recovery)...",
+          flush=True)
+    ev = heldout_eval(specs=heldout_default(), cc_overrides=res.weights)
+    ev["weights_meta"] = meta
+    with open(os.path.join(OUT_DIR, "heldout_table.json"), "w") as f:
+        json.dump(ev, f, indent=1)
+    for r in ev["scenarios"]:
+        print(f"  {r['scenario']:32s} mlp {r['completion_ms']['mlp']:8.3f}ms"
+              f"  vs best({r['best_classical']}) {r['vs_best_pct']:+.1f}%"
+              f"  vs worst({r['worst_classical']}) {r['vs_worst_pct']:+.1f}%",
+              flush=True)
+    print(f"all within 5% of best: {ev['all_within_5pct_of_best']}   "
+          f"all beat worst: {ev['all_beat_worst']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -853,7 +853,7 @@ def _make_step(policy: Policy, cfg: EngineConfig, plan: _Plan,
 
 
 def _make_run(policy: Policy, cfg: EngineConfig, plan: _Plan,
-              early_exit: bool, faulty: bool = False):
+              early_exit: bool, faulty: bool = False, remat: bool = False):
     """Build the full (jittable) stepping loop.
 
     Each step is gated on ``done.all() | diverged | (it >= total)`` so
@@ -861,7 +861,19 @@ def _make_run(policy: Policy, cfg: EngineConfig, plan: _Plan,
     the chunked while_loop additionally stops integrating at the first
     chunk boundary where every flow is done (or the lane diverged).  Both
     variants therefore produce bitwise-identical carries.
+
+    ``remat`` (fixed-length path only) rematerializes the scan in
+    ``cfg.chunk_steps``-sized segments: each segment is wrapped in
+    ``jax.checkpoint``, so reverse-mode AD stores one carry per segment
+    plus one segment's activations instead of every step's — O(sqrt)
+    memory for long-horizon gradients (the ``repro.learn`` trainer's
+    path).  The forward computation is the same gated step sequence, so
+    forward values match the monolithic scan exactly.
     """
+    if remat and early_exit:
+        raise ValueError("remat applies to the fixed-length scan only "
+                         "(early_exit=False): lax.while_loop is not "
+                         "reverse-mode differentiable anyway")
     step = _make_step(policy, cfg, plan, faulty)
     total = cfg.max_steps * (cfg.max_extends + 1)
     chunk = max(1, min(cfg.chunk_steps, total))
@@ -875,6 +887,22 @@ def _make_run(policy: Policy, cfg: EngineConfig, plan: _Plan,
             return c2, None
 
         if not early_exit:
+            if remat:
+                # ceil(total/chunk) checkpointed segments; trailing
+                # it >= total steps are gated no-ops, so the padded tail
+                # is inert and forward values match the monolithic scan
+                n_seg = -(-total // chunk)
+
+                @jax.checkpoint
+                def seg(c, it0):
+                    c, _ = lax.scan(
+                        body, c, it0 + jnp.arange(chunk, dtype=jnp.int32))
+                    return c, None
+
+                carry2, _ = lax.scan(
+                    seg, carry,
+                    jnp.arange(n_seg, dtype=jnp.int32) * chunk)
+                return carry2, jnp.int32(total)
             carry2, _ = lax.scan(body, carry, jnp.arange(total, dtype=jnp.int32))
             return carry2, jnp.int32(total)
 
@@ -1012,7 +1040,7 @@ class Simulator:
         )
 
     # -- differentiable objective -------------------------------------------
-    def soft_cost_fn(self):
+    def soft_cost_fn(self, remat: bool = False):
         """Pure ``(cc_params, fabric_params=default) -> soft_cost`` suitable
         for grad/vmap/jit — differentiable through the fabric knobs too.
 
@@ -1020,10 +1048,16 @@ class Simulator:
         reverse-mode differentiable.  The integrand freezes once every flow
         completes (steps become no-ops), so the integral is insensitive to
         the step budget's tail.
+
+        ``remat=True`` selects the rematerialized scan (``jax.checkpoint``
+        over ``cfg.chunk_steps``-sized segments): same forward value,
+        O(total/chunk + chunk) instead of O(total) carries live during the
+        backward pass — the memory-feasible path for long-horizon training
+        (``repro.learn``).
         """
         faulty = is_faulty(self.fault)
         run = _make_run(self.policy, self.cfg, self.plan, early_exit=False,
-                        faulty=faulty)
+                        faulty=faulty, remat=remat)
         pp, plan, policy, cfg = self.pp, self.plan, self.policy, self.cfg
         default_fab, default_flt = self.fabric, self.fault
 

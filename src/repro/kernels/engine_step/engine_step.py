@@ -7,9 +7,10 @@ sweeping CC x fabric x fault grids (see ``repro.core.engine`` stages 1-7):
     Stages 1-2 fused into one VPU pass: ECN-mark product, queueing-delay
     RTT and HPCC INT utilisation across the flow's MAXHOP path slots,
     feeding directly into the *generic* per-flow policy state update — any
-    kernel-eligible registered policy (all seven: the ``Signals``-driven
-    update is pure elementwise jnp, so the same tiled body runs DCQCN and
-    HPCC alike; cf. the DCQCN-only ``kernels/cc_update``).  Flows tile
+    kernel-eligible registered policy (all eight, the learned ``mlp``
+    included: the ``Signals``-driven update is pure elementwise jnp, so
+    the same tiled body runs DCQCN and HPCC alike; cf. the DCQCN-only
+    ``kernels/cc_update``).  Flows tile
     (8, 128) (sublane x lane); the sweep batch axis is folded into the
     leading grid dimension, so a B-lane vmapped sweep is one grid of
     B x N8/8 tiles instead of B separate dispatches.

@@ -1,0 +1,180 @@
+"""The learned CC policy: a tiny per-flow MLP in the Policy-API-v2 mold.
+
+One hidden layer over six normalized feedback/context features, two
+heads computing bounded rate/window *targets* that the per-flow state
+tracks at RTT timescale.  Everything rides the existing policy currency:
+
+* weights are flat scalar ``ParamSpec`` entries (``w1_{j}{i}``,
+  ``b1_{j}``, ``w2_{o}{j}``, ``b2_{o}``) — the trained weights ARE the
+  policy's ``cc_params``, so sweeps, autotune, ``stack_policies`` and the
+  engine's traced-params contract all apply unchanged;
+* state is a dict of (F,) float32 leaves and the update is pure
+  elementwise jnp, so the policy is kernel-eligible
+  (``cc.kernel_eligible``) and runs on the fused Pallas engine-step tiles
+  like the seven classical policies;
+* the loss reaction is a *structural* multiplicative cut outside the net
+  (``loss_cut``), so the ``loss_aware`` monotonicity contract holds for
+  any weight setting, and the ``jnp.where(loss > 0, ...)`` guard keeps
+  lossless runs bitwise-identical to the goldens.
+
+Features (all dimensionless, bounded): ECN mark fraction, squashed
+queueing-delay ratio, squashed INT utilisation, current rate / line,
+window / BDP (squashed), 1 / schedule fan-in.  The window target is
+parametrized *around* the static-window prior (paper §IV-E:
+W = margin*BDP/fanin + headroom/fanin) and the rate target around the
+line rate, so zero weights recover the static-window policy and the net
+learns a modulation of a known-good baseline.
+
+``default_weights()`` loads the committed trained weights
+(``mlp_weights.json``, produced by ``scripts/train_mlp_cc.py``) so
+``cc.get_policy("mlp")`` is the *trained* policy; a fresh seeded init is
+used only when the file is absent.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cc import FlowCtx, ParamSpec, Policy, Signals  # noqa: F401
+
+N_FEATURES = 6
+HIDDEN = 4
+
+# head parametrization: the state *tracks* net-computed bounded targets at
+# RTT timescale (alpha = dt/rtt) instead of taking a raw multiplicative
+# random walk.  A multiplicative update saturates rate/win at the hard
+# clip bounds within a few hundred RTTs, and clip's flat region kills the
+# gradient — target tracking is a contraction (alpha < 1), so gradients
+# flow through the target at every step of the unrolled scan.
+_RATE_BIAS = 4.0     # sigmoid(bias) = 0.982: zero weights -> rate ~ line
+_WIN_SPAN = 2.5      # win target within e^+-2.5 of the static-window prior
+
+_WEIGHT_BOUND = 8.0
+
+
+def _weight_names() -> tuple:
+    names = []
+    for j in range(HIDDEN):
+        names += [f"w1_{j}{i}" for i in range(N_FEATURES)] + [f"b1_{j}"]
+    for o in range(2):
+        names += [f"w2_{o}{j}" for j in range(HIDDEN)] + [f"b2_{o}"]
+    return tuple(names)
+
+
+WEIGHT_KEYS = _weight_names()
+
+_WEIGHTS_PATH = os.path.join(os.path.dirname(__file__), "mlp_weights.json")
+_DEFAULT_CACHE: dict = {}
+
+
+def init_weights(seed: int = 0) -> dict:
+    """Deterministic small-Gaussian training init, biased into the
+    *binding* regime (rate target ~ line/2, window target well below the
+    static-window prior).  The fluid model's ``min()`` delivery dynamics
+    make the soft cost exactly flat wherever rate/window have surplus, so
+    an init on the plateau sees zero gradient; starting where the outputs
+    bind gives the trainer a live gradient toward the pipe-filling
+    optimum (lossy scenarios then supply the interior trade-off)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k in WEIGHT_KEYS:
+        out[k] = 0.0 if k.startswith("b") else float(rng.normal(0.0, 0.2))
+    # rate target sigmoid(-2.5) ~ 0.08*line: below even an 8-way incast's
+    # fair share, so the rate head binds in every curriculum scenario
+    out["b2_0"] = -(_RATE_BIAS + 2.5)
+    out["b2_1"] = -1.0               # win target ~ 0.15x the prior
+    return out
+
+
+def default_weights() -> dict:
+    """The committed trained weights (fallback: seeded init)."""
+    if "w" not in _DEFAULT_CACHE:
+        if os.path.exists(_WEIGHTS_PATH):
+            with open(_WEIGHTS_PATH) as f:
+                w = {k: float(v) for k, v in json.load(f)["weights"].items()}
+            missing = set(WEIGHT_KEYS) - set(w)
+            if missing:
+                raise ValueError(f"mlp_weights.json is missing {sorted(missing)}"
+                                 " — regenerate via scripts/train_mlp_cc.py")
+        else:
+            w = init_weights(0)
+        _DEFAULT_CACHE["w"] = w
+    return dict(_DEFAULT_CACHE["w"])
+
+
+def make_mlp(weights: dict | None = None, out_gain: float = 1.0,
+             loss_cut: float = 1.0) -> Policy:
+    """The learned policy.  ``weights=None`` loads the committed trained
+    weights; pass a dict (e.g. a training checkpoint) to bake others in
+    as the spec defaults.  ``out_gain`` scales the target-tracking speed
+    (the policy's interpretable key tunable — 0 freezes the state at its
+    static-window init); ``loss_cut`` scales the structural lossy-RoCE
+    rate/window cut."""
+    w = default_weights() if weights is None else dict(weights)
+    unknown = set(w) - set(WEIGHT_KEYS)
+    if unknown or set(WEIGHT_KEYS) - set(w):
+        raise ValueError(f"weights must cover exactly {len(WEIGHT_KEYS)} keys"
+                         f" (unknown: {sorted(unknown)})")
+    spec = {"out_gain": ParamSpec(float(out_gain), lo=0.0, hi=4.0,
+                                  scale="linear"),
+            "loss_cut": ParamSpec(float(loss_cut), lo=0.0, hi=4.0,
+                                  scale="linear")}
+    for k in WEIGHT_KEYS:
+        spec[k] = ParamSpec(float(np.clip(w[k], -_WEIGHT_BOUND,
+                                          _WEIGHT_BOUND)),
+                            lo=-_WEIGHT_BOUND, hi=_WEIGHT_BOUND,
+                            scale="linear")
+
+    def init(ctx: FlowCtx):
+        f = jnp.maximum(ctx.fanin, 1.0)
+        win0 = jnp.maximum(2.0 * ctx.bdp / f + 0.5e6 / f, 4000.0)
+        return {"rate": ctx.line * 1.0, "win": win0,
+                "bdp": ctx.bdp * 1.0, "fanin": f}
+
+    def update(p, st, sig: Signals):
+        line = jnp.maximum(sig.line, 1.0)
+        base = jnp.maximum(sig.base_rtt, 1e-7)
+        bdp = jnp.maximum(st["bdp"], 1.0)
+        qd = jnp.maximum(sig.rtt - sig.base_rtt, 0.0) / base
+        u = jnp.maximum(sig.util, 0.0)
+        x = (sig.ecn,
+             qd / (1.0 + qd),
+             u / (1.0 + u),
+             st["rate"] / line,
+             st["win"] / (st["win"] + 4.0 * bdp),
+             1.0 / jnp.maximum(st["fanin"], 1.0))
+        h = [jnp.tanh(sum(p[f"w1_{j}{i}"] * x[i] for i in range(N_FEATURES))
+                      + p[f"b1_{j}"])
+             for j in range(HIDDEN)]
+        sr = sum(p[f"w2_0{j}"] * h[j] for j in range(HIDDEN)) + p["b2_0"]
+        sw = sum(p[f"w2_1{j}"] * h[j] for j in range(HIDDEN)) + p["b2_1"]
+        # bounded targets: rate in (0, line), window within e^+-_WIN_SPAN
+        # of the static-window prior (zero weights -> the prior itself)
+        f = jnp.maximum(st["fanin"], 1.0)
+        win_prior = jnp.maximum(2.0 * bdp / f + 0.5e6 / f, 4000.0)
+        rate_tgt = line * jax.nn.sigmoid(sr + _RATE_BIAS)
+        win_tgt = win_prior * jnp.exp(_WIN_SPAN * jnp.tanh(sw))
+        # exponential tracking at RTT timescale; dt/rtt scaling makes the
+        # per-RTT convergence independent of the integrator's step size
+        a = jnp.clip(p["out_gain"] * sig.dt / jnp.maximum(base, sig.dt),
+                     0.0, 1.0)
+        rate = jnp.clip(st["rate"] + a * (rate_tgt - st["rate"]),
+                        1e-3 * line, line)
+        win = jnp.clip(st["win"] + a * (win_tgt - st["win"]),
+                       1000.0, 32.0 * bdp)
+        # structural lossy-RoCE cut outside the net: monotone in loss for
+        # any weights (the loss_aware contract); guarded where keeps
+        # loss==0 bitwise-lossless
+        cut = 1.0 - 0.5 * jnp.minimum(2.0 * p["loss_cut"] * sig.loss, 1.0)
+        rate = jnp.where(sig.loss > 0,
+                         jnp.maximum(rate * cut, 1e-3 * line), rate)
+        win = jnp.where(sig.loss > 0, jnp.maximum(win * cut, 1000.0), win)
+        st2 = {"rate": rate, "win": win, "bdp": st["bdp"],
+               "fanin": st["fanin"]}
+        return st2, rate, win
+
+    return Policy("mlp", spec, init, update, kind="mixed", loss_aware=True)

@@ -1,0 +1,290 @@
+"""The learned-CC subsystem (``repro.learn``): gradient correctness of
+``soft_cost`` through both scan paths, the ``mlp`` policy's integration
+contracts (registry, kernels, ``stack_policies``), and the trainer's
+robustness guarantees (determinism, resume, non-finite guard).
+
+The whole suite carries the ``learn`` marker (``pytest -m learn``).
+
+Gradient tests run on a lossy go-back-N incast: the fluid model's
+``min()`` delivery dynamics make the soft cost *exactly* flat wherever
+rate/window have surplus in a healthy fabric (any allocation that keeps
+the bottleneck busy delivers the same integral), so a healthy scenario
+has no finite-differencable signal — loss recovery puts a live
+rate/goodput trade-off into the objective.
+"""
+import json
+import math
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import cc
+from repro.core.engine import EngineConfig, Simulator, _as_fabric
+from repro.core.faults import FaultSpec
+from repro.core.scenario import IncastSpec, ScenarioSpec
+from repro.core.sweep import SweepRunner
+from repro.learn.net import WEIGHT_KEYS, init_weights, make_mlp
+from repro.learn.train import (Task, TrainConfig, _single, load_checkpoint,
+                               save_checkpoint, train)
+
+pytestmark = pytest.mark.learn
+
+CFG = EngineConfig(dt=2e-6, max_steps=900, max_extends=0, queue_stride=0)
+
+_CASE = {}
+
+
+def _lossy_case():
+    """One cached lossy-GBN incast at a mid-binding operating point (both
+    heads active, away from every clip bound)."""
+    if not _CASE:
+        w = init_weights(0)
+        w["b2_0"] = -4.0
+        w["b2_1"] = 0.0
+        pol = make_mlp(weights=w)
+        spec = ScenarioSpec(_single(8), IncastSpec(7, 2e6), "mlp",
+                            fault_spec=FaultSpec.lossy_roce(2e-3, "gbn"))
+        topo, sched, _ = spec.build()
+        sim = Simulator(topo, sched, pol, CFG, fault_spec=spec.fault_spec)
+        _CASE["params"] = dict(pol.params)
+        _CASE["fab"] = _as_fabric(None, CFG)
+        _CASE["cost"] = jax.jit(sim.soft_cost_fn())
+        _CASE["cost_remat"] = jax.jit(sim.soft_cost_fn(remat=True))
+        _CASE["sim"] = sim
+    return _CASE
+
+
+# ---------------------------------------------------------------------------
+# registry / kernel integration
+# ---------------------------------------------------------------------------
+
+def test_mlp_registered_kernel_eligible():
+    pol = cc.get_policy("mlp")
+    assert "mlp" in cc.ALL_POLICIES
+    assert pol.loss_aware
+    # dict-of-(F,) state + pure elementwise update: rides the fused
+    # Pallas engine-step tiles (the kernel-vs-ref pin itself lives in
+    # test_engine_step_kernel.py, parametrized over the whole registry)
+    assert cc.kernel_eligible(pol)
+
+
+def test_make_mlp_rejects_bad_weight_sets():
+    with pytest.raises(ValueError):
+        make_mlp(weights={"nope": 1.0})
+    partial = {k: 0.0 for k in list(WEIGHT_KEYS)[:-1]}
+    with pytest.raises(ValueError):
+        make_mlp(weights=partial)
+
+
+def test_stack_policies_with_mlp():
+    """A (classical, learned) tuple stacks into one batched dispatch and
+    each lane reproduces its solo run."""
+    spec = ScenarioSpec(_single(8), IncastSpec(7, 2e6), "mlp")
+    topo, sched, _ = spec.build()
+    runner = SweepRunner(CFG)
+    batch = runner.run_policy_axis(topo, sched, ["dcqcn", "mlp"], cfg=CFG)
+    assert batch.policy_axis == ("dcqcn", "mlp")
+    assert batch.lane_status() == ["ok", "ok"]
+    solo = Simulator(topo, sched, cc.get_policy("mlp"), CFG).run()
+    np.testing.assert_allclose(batch.completion_time[1],
+                               float(solo.completion_time), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# gradient correctness (satellite: FD vs autodiff, both scan paths)
+# ---------------------------------------------------------------------------
+
+def test_remat_forward_bitwise_identical():
+    c = _lossy_case()
+    a = float(c["cost"](c["params"], c["fab"]))
+    b = float(c["cost_remat"](c["params"], c["fab"]))
+    assert a == b          # jax.checkpoint must not change the forward
+
+
+def test_remat_rejects_early_exit():
+    sim = _lossy_case()["sim"]
+    from repro.core.engine import _make_run
+    with pytest.raises(ValueError, match="remat"):
+        _make_run(sim.policy, sim.cfg, sim.plan, early_exit=True,
+                  remat=True)
+
+
+def test_grad_remat_matches_nonremat():
+    c = _lossy_case()
+    g = jax.grad(lambda p: c["cost"](p, c["fab"]))(c["params"])
+    gr = jax.grad(lambda p: c["cost_remat"](p, c["fab"]))(c["params"])
+    for k in g:
+        np.testing.assert_allclose(float(g[k]), float(gr[k]), rtol=1e-4,
+                                   err_msg=k)
+    gf = jax.grad(lambda f: c["cost"](c["params"], f))(c["fab"])
+    gfr = jax.grad(lambda f: c["cost_remat"](c["params"], f))(c["fab"])
+    for k in ("kmin", "kmax", "pmax", "xoff", "xon"):
+        np.testing.assert_allclose(float(getattr(gf, k)),
+                                   float(getattr(gfr, k)), rtol=1e-4,
+                                   err_msg=k)
+
+
+@pytest.mark.parametrize("remat", [False, True])
+def test_fd_gradient_cc_params(remat):
+    """Central finite differences confirm the autodiff gradient w.r.t.
+    the policy weights (loose tolerance: f32 forward, 900-step unroll)."""
+    c = _lossy_case()
+    cost = c["cost_remat"] if remat else c["cost"]
+    g = jax.grad(lambda p: cost(p, c["fab"]))(c["params"])
+    for key, eps in (("b2_0", 0.05), ("b2_1", 0.05)):
+        pp = {**c["params"], key: c["params"][key] + eps}
+        pm = {**c["params"], key: c["params"][key] - eps}
+        fd = (float(cost(pp, c["fab"])) - float(cost(pm, c["fab"]))) \
+            / (2 * eps)
+        ad = float(g[key])
+        assert math.copysign(1, fd) == math.copysign(1, ad), key
+        np.testing.assert_allclose(ad, fd, rtol=0.3, err_msg=key)
+
+
+@pytest.mark.parametrize("remat", [False, True])
+def test_fd_gradient_fabric_params(remat):
+    """Same FD pin for the FabricParams leaves (pmax: the ECN marking
+    ceiling drives the policy's rate response, which trades goodput
+    against loss recovery)."""
+    c = _lossy_case()
+    cost = c["cost_remat"] if remat else c["cost"]
+    gf = jax.grad(lambda f: cost(c["params"], f))(c["fab"])
+    eps = 0.2
+    fd = (float(cost(c["params"], c["fab"].replace(pmax=c["fab"].pmax + eps)))
+          - float(cost(c["params"],
+                       c["fab"].replace(pmax=c["fab"].pmax - eps)))) \
+        / (2 * eps)
+    ad = float(gf.pmax)
+    assert fd != 0.0
+    assert math.copysign(1, fd) == math.copysign(1, ad)
+    np.testing.assert_allclose(ad, fd, rtol=0.3)
+
+
+# ---------------------------------------------------------------------------
+# trainer robustness (fake tasks: exact quadratic bowls, no simulator)
+# ---------------------------------------------------------------------------
+
+def _quad_task(name="quad", weight=1.0, nan_at=None):
+    """A deterministic quadratic-bowl task; ``nan_at=k`` poisons the k-th
+    evaluation (1-based) the way a diverged simulation would."""
+    target = {k: 0.3 * ((i % 5) - 2) for i, k in enumerate(WEIGHT_KEYS)}
+    calls = {"n": 0}
+
+    def vg(w):
+        calls["n"] += 1
+        if nan_at is not None and calls["n"] == nan_at:
+            return float("nan"), {k: 0.0 for k in WEIGHT_KEYS}
+        cst = sum((float(w[k]) - target[k]) ** 2 for k in WEIGHT_KEYS)
+        grd = {k: 2 * (float(w[k]) - target[k]) for k in WEIGHT_KEYS}
+        return cst, grd
+
+    return Task(name=name, weight=weight, vg=vg)
+
+
+def test_trainer_deterministic_bitwise():
+    cfg = TrainConfig(steps=4, lr=0.05, seed=7)
+    r1 = train(cfg, tasks=[_quad_task()])
+    r2 = train(cfg, tasks=[_quad_task()])
+    assert r1.weights == r2.weights          # bitwise: python-float Adam
+    assert [h["loss"] for h in r1.history] \
+        == [h["loss"] for h in r2.history]
+
+
+def test_trainer_seed_changes_init():
+    assert init_weights(0) != init_weights(1)
+    assert init_weights(3) == init_weights(3)
+
+
+def test_trainer_loss_decreases_on_bowl():
+    res = train(TrainConfig(steps=60, lr=0.1), tasks=[_quad_task()])
+    losses = [h["loss"] for h in res.history]
+    assert losses[-1] < 0.1 * losses[0]
+    assert res.final_loss == losses[-1]
+
+
+def test_trainer_resume_bitwise(tmp_path):
+    ck = str(tmp_path / "ck.json")
+    straight = train(TrainConfig(steps=6), tasks=[_quad_task()])
+    train(TrainConfig(steps=3), tasks=[_quad_task()], checkpoint_path=ck)
+    resumed = train(TrainConfig(steps=6), tasks=[_quad_task()], resume=ck)
+    assert resumed.weights == straight.weights
+    assert len(resumed.history) == 6
+    assert [h["loss"] for h in resumed.history] \
+        == [h["loss"] for h in straight.history]
+
+
+def test_trainer_resume_rejects_seed_mismatch(tmp_path):
+    ck = str(tmp_path / "ck.json")
+    train(TrainConfig(steps=1, seed=0), tasks=[_quad_task()],
+          checkpoint_path=ck)
+    with pytest.raises(ValueError, match="seed"):
+        train(TrainConfig(steps=2, seed=1), tasks=[_quad_task()], resume=ck)
+
+
+def test_trainer_nonfinite_guard():
+    """A poisoned step freezes weights AND optimizer moments (mirroring
+    autotune's non-finite member guard) and is recorded in history."""
+    cfg = TrainConfig(steps=2, lr=0.05, seed=3)
+    poisoned = train(cfg, tasks=[_quad_task(nan_at=2)])
+    assert [h["nonfinite"] for h in poisoned.history] == [False, True]
+    assert math.isnan(poisoned.history[1]["loss"])
+    clean_1step = train(TrainConfig(steps=1, lr=0.05, seed=3),
+                        tasks=[_quad_task()])
+    # step 2 was frozen, so 2 poisoned steps == 1 clean step, bitwise
+    assert poisoned.weights == clean_1step.weights
+
+
+def test_checkpoint_roundtrip_exact(tmp_path):
+    ck = str(tmp_path / "ck.json")
+    state = {"seed": 0, "step": 3, "weights": {"a": 0.1 + 0.2},
+             "m": {"a": -1e-17}, "v": {"a": 2.0 ** -40},
+             "history": [{"loss": 1.0}], "baselines": {"t": 3.3e-4}}
+    save_checkpoint(ck, state)
+    assert load_checkpoint(ck) == state  # float64 JSON repr is exact
+
+
+def test_weights_projected_into_bounds():
+    wild = {k: 100.0 for k in WEIGHT_KEYS}
+    res = train(TrainConfig(steps=1), tasks=[_quad_task()],
+                resume={"seed": 0, "step": 0, "weights": wild,
+                        "m": {k: 0.0 for k in WEIGHT_KEYS},
+                        "v": {k: 0.0 for k in WEIGHT_KEYS},
+                        "history": [], "baselines": {}})
+    assert all(-8.0 <= v <= 8.0 for v in res.weights.values())
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: a real gradient-through-sim descent
+# ---------------------------------------------------------------------------
+
+def test_train_through_simulator_decreases_loss():
+    """Three Adam steps through the real (remat) simulator from the
+    binding-regime init strictly decrease the normalized soft cost."""
+    from repro.learn.train import make_task
+    cfg = TrainConfig(steps=3, lr=0.05)
+    task = make_task(ScenarioSpec(_single(8), IncastSpec(7, 1e6), "mlp",
+                                  name="t"),
+                     engine_cfg=EngineConfig(dt=2e-6, max_steps=900,
+                                             max_extends=0, queue_stride=0),
+                     corners=(None,), train_cfg=cfg)
+    res = train(cfg, tasks=[task])
+    losses = [h["loss"] for h in res.history]
+    assert all(math.isfinite(x) for x in losses)
+    assert losses[-1] < losses[0]
+    assert not any(h["nonfinite"] for h in res.history)
+
+
+def test_shipped_weights_file_contract():
+    """If the trained-weights artifact is committed it must cover every
+    weight key with finite in-bounds values (default_weights() refuses a
+    stale/partial file)."""
+    path = os.path.join(os.path.dirname(__file__), os.pardir, "src",
+                        "repro", "learn", "mlp_weights.json")
+    if not os.path.exists(path):
+        pytest.skip("no trained weights committed yet")
+    blob = json.load(open(path))
+    w = blob["weights"]
+    assert set(w) == set(WEIGHT_KEYS)
+    assert all(math.isfinite(v) and -8.0 <= v <= 8.0 for v in w.values())
