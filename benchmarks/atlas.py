@@ -1,4 +1,4 @@
-"""Policy x tuned-param x fabric atlas slices through the sharded path.
+"""Policy x tuned-param x fabric atlas slices through the campaign layer.
 
 The regime atlas the ROADMAP calls for, one committed slice at a time:
 for each CC policy, a key tuning parameter (spanned around its paper
@@ -7,6 +7,15 @@ default) is crossed with a fig-12-style fabric grid — paired ECN ramps
 every (policy, param, fabric) cell one lane of a sharded
 ``SweepRunner(mesh="auto")`` dispatch.  Emits one CSV row per cell plus a
 JSON sidecar with the wall-clock/scaling record.
+
+Since PR 10 the dispatch runs through ``repro.core.campaign``: every
+chunk is journaled (atomic write under
+``experiments/atlas/<campaign>/journal/``), so a killed run resumes with
+``--resume`` instead of starting over, failed chunks degrade down the
+retry ladder instead of aborting the slice, unhealthy lanes get one
+relaxed-budget quarantine retry, and ``manifest.json`` records exactly
+what the committed CSV covers.  The CSV/JSON schema is unchanged from
+the pre-campaign atlas.
 
 The learned policy rides the same axes: the ``mlp`` slice spans its
 ``out_gain`` (the target-tracking speed — 0.5x/1x/2x the trained
@@ -18,7 +27,7 @@ Usage (the committed ``experiments/atlas/`` slice):
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
     REPRO_BENCH_SCALE=paper \\
-    PYTHONPATH=src python benchmarks/atlas.py
+    PYTHONPATH=src python benchmarks/atlas.py [--resume] [--deadline S]
 
 ``REPRO_BENCH_SCALE=small`` gives a CI-sized smoke of the same shape.
 The workload is the topology-aware ring All-Reduce (tractable at 128
@@ -29,6 +38,7 @@ artifact, not a measurement).
 """
 from __future__ import annotations
 
+import argparse
 import csv
 import json
 import os
@@ -43,10 +53,11 @@ except ImportError:              # direct script run: sys.path[0]=benchmarks/
     from common import SCALE, collective_size, paper_fabric
 
 from repro.common.cache import enable_compilation_cache
+from repro.core.campaign import CampaignTask, run_campaign
 from repro.core.cc import get_policy
 from repro.core.collectives import allreduce_ring
 from repro.core.engine import EngineConfig
-from repro.core.sweep import SweepRunner
+from repro.core.sweep import BatchResults, SweepRunner
 
 OUTDIR = os.environ.get("REPRO_ATLAS_OUT", "experiments/atlas")
 
@@ -73,22 +84,35 @@ def atlas_cfg() -> EngineConfig:
                         queue_stride=0)
 
 
-def policy_slice(runner: SweepRunner, topo, sched, pol: str) -> dict:
-    """One sharded dispatch: key-param span x fabric grid for ``pol``."""
+def _key_param_values(pol: str) -> list[float]:
     policy = get_policy(pol)
-    key = KEY_PARAM[pol]
-    spec = policy.param_spec(key)
-    vals = [min(max(spec.default * s, spec.lo), spec.hi)
+    spec = policy.param_spec(KEY_PARAM[pol])
+    return [min(max(spec.default * s, spec.lo), spec.hi)
             for s in PARAM_SPAN]
-    lanes = [(v, f) for v in vals for f in FABRIC_PTS]
-    pts = np.asarray([f for _, f in lanes], np.float32)
-    t0 = time.time()
-    batch = runner.run_batch(
-        topo, sched, policy,
-        {key: np.asarray([v for v, _ in lanes], np.float32)},
-        stacked_fabric={"kmin": pts[:, 0], "kmax": pts[:, 1],
-                        "xoff": pts[:, 2]})
-    wall = time.time() - t0
+
+
+def build_tasks(topo, sched) -> list[CampaignTask]:
+    """One campaign task per policy: its key-param span x fabric grid."""
+    tasks = []
+    for pol in KEY_PARAM:
+        key = KEY_PARAM[pol]
+        lanes = [(v, f) for v in _key_param_values(pol)
+                 for f in FABRIC_PTS]
+        pts = np.asarray([f for _, f in lanes], np.float32)
+        tasks.append(CampaignTask(
+            pol, topo, sched, get_policy(pol),
+            stacked_params={key: np.asarray([v for v, _ in lanes],
+                                            np.float32)},
+            stacked_fabric={"kmin": pts[:, 0], "kmax": pts[:, 1],
+                            "xoff": pts[:, 2]}))
+    return tasks
+
+
+def policy_rows(pol: str, batch: BatchResults, wall_s: float) -> dict:
+    """CSV rows + summary for one policy's merged slice (schema identical
+    to the pre-campaign atlas)."""
+    key = KEY_PARAM[pol]
+    spec = get_policy(pol).param_spec(key)
     rows = []
     status = batch.lane_status()
     for i in range(batch.n):
@@ -105,7 +129,7 @@ def policy_slice(runner: SweepRunner, topo, sched, pol: str) -> dict:
             "lane_status": status[i],
         })
     fin = batch.finished
-    out = {"rows": rows, "wall_s": round(wall, 1), "n_lanes": batch.n,
+    out = {"rows": rows, "wall_s": round(wall_s, 1), "n_lanes": batch.n,
            "n_unfinished": int((~fin).sum())}
     if fin.any():
         best = batch.best()
@@ -121,7 +145,21 @@ def policy_slice(runner: SweepRunner, topo, sched, pol: str) -> dict:
     return out
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--resume", action="store_true",
+                    help="replay journaled chunks of a killed run")
+    ap.add_argument("--fresh", action="store_true",
+                    help="discard an existing journal and restart")
+    ap.add_argument("--deadline", type=float, default=None, metavar="S",
+                    help="wall-clock budget; checkpoint-and-exit after")
+    ap.add_argument("--chunk-timeout", type=float, default=None,
+                    metavar="S", help="per-chunk watchdog timeout")
+    ap.add_argument("--max-retries", type=int, default=3)
+    ap.add_argument("--chunk-lanes", type=int, default=None,
+                    help="lanes per journaled chunk (default: auto)")
+    args = ap.parse_args(argv)
+
     enable_compilation_cache()
     fab = paper_fabric()
     topo = fab.build()
@@ -130,23 +168,34 @@ def main():
     sched = allreduce_ring(topo, list(range(fab.n_gpus)), collective_size(),
                            n_chunks=1)
     cfg = atlas_cfg()
-    runner = SweepRunner(cfg, mesh="auto")
+    runner = SweepRunner(cfg, mesh="auto",
+                         chunk_lanes=args.chunk_lanes or "auto")
     n_dev = runner.n_mesh_devices
     print(f"atlas: scale={SCALE} gpus={fab.n_gpus} flows={sched.n_flows} "
           f"devices={n_dev} mesh={runner.mesh}")
     os.makedirs(OUTDIR, exist_ok=True)
+    tag = f"{SCALE}_ring{fab.n_gpus}"
     t00 = time.time()
+    res = run_campaign(build_tasks(topo, sched), name=f"atlas_{tag}",
+                       out_dir=OUTDIR, runner=runner, cfg=cfg,
+                       chunk_lanes=args.chunk_lanes,
+                       resume=args.resume, fresh=args.fresh,
+                       max_retries=args.max_retries,
+                       deadline_s=args.deadline,
+                       chunk_timeout_s=args.chunk_timeout,
+                       progress=lambda m: print(f"  [campaign] {m}"))
+    total = time.time() - t00
     all_rows, meta = [], {}
     for pol in KEY_PARAM:
-        s = policy_slice(runner, topo, sched, pol)
+        ts = res.manifest["tasks"].get(pol, {})
+        wall = sum(c.get("wall_s", 0.0) for c in ts.get("chunks", ()))
+        s = policy_rows(pol, res.results[pol], wall)
         all_rows += s["rows"]
         meta[pol] = {k: v for k, v in s.items() if k != "rows"}
         best = s.get("best", {}).get("completion_ms", "n/a")
         print(f"  {pol:8s} B={s['n_lanes']} wall {s['wall_s']}s "
               f"best {best}ms spread {s.get('spread_pct', 'n/a')}% "
               f"unfinished {s['n_unfinished']}")
-    total = time.time() - t00
-    tag = f"{SCALE}_ring{fab.n_gpus}"
     csv_path = os.path.join(OUTDIR, f"atlas_{tag}.csv")
     with open(csv_path, "w", newline="") as f:
         w = csv.DictWriter(f, fieldnames=list(all_rows[0]))
@@ -164,6 +213,17 @@ def main():
         "total_wall_s": round(total, 1),
         "cells": len(all_rows),
         "per_policy": meta,
+        "campaign": {
+            "status": res.status,
+            "coverage": res.manifest["coverage"],
+            "fingerprint": res.manifest["fingerprint"],
+            "manifest": os.path.join(res.out_dir, "manifest.json"),
+            "demotions": sum(len(t["demotions"])
+                             for t in res.manifest["tasks"].values()),
+            "quarantined": {p: t["quarantine"]["lanes"]
+                            for p, t in res.manifest["tasks"].items()
+                            if t.get("quarantine")},
+        },
         "note": "emulated host devices share one core: the sharded "
                 "dispatch here validates placement/equivalence at paper "
                 "scale, wall-clock parallel speedup needs real devices "
@@ -172,8 +232,11 @@ def main():
     }
     with open(os.path.join(OUTDIR, f"atlas_{tag}.json"), "w") as f:
         json.dump(side, f, indent=1)
-    print(f"wrote {csv_path} ({len(all_rows)} cells) in {total:.0f}s")
+    print(f"wrote {csv_path} ({len(all_rows)} cells) in {total:.0f}s "
+          f"[campaign {res.status}, coverage "
+          f"{res.manifest['coverage']:.0%}]")
+    return 0 if res.ok else 2
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

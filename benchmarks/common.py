@@ -91,9 +91,15 @@ def emit(rows: list[tuple]):
 
 
 def save_json(name: str, obj):
+    """Atomic (tmp-file + rename) so a benchmark killed mid-write leaves
+    the previous sidecar intact instead of truncated JSON — the same
+    discipline as the campaign journal (``repro.core.campaign``)."""
     os.makedirs(OUTDIR, exist_ok=True)
-    with open(os.path.join(OUTDIR, name), "w") as f:
+    path = os.path.join(OUTDIR, name)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
         json.dump(obj, f, indent=1, default=float)
+    os.replace(tmp, path)
 
 
 def downsample(x: np.ndarray, n: int = 200) -> list:

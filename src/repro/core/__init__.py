@@ -25,6 +25,16 @@ from repro.core.faults import (  # noqa: F401
     FAULT_PARAM_SPECS,
     RECOVERY_MODES,
     FaultSpec,
+    LaneStatus,
+    classify_lane,
+)
+from repro.core.campaign import (  # noqa: F401
+    CampaignError,
+    CampaignFingerprintMismatch,
+    CampaignResult,
+    CampaignTask,
+    run_campaign,
+    smoke_tasks,
 )
 from repro.core.engine import (  # noqa: F401
     FABRIC_PARAM_SPECS,
@@ -53,5 +63,6 @@ from repro.core.sweep import (  # noqa: F401
     grid_from_spec,
     load_calibration,
     save_calibration,
+    stack_policy_axis,
 )
 from repro.core.topology import LINK_CLASSES, clos, single_switch  # noqa: F401

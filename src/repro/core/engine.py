@@ -73,7 +73,8 @@ from jax import lax
 from repro.core.cc import (FlowCtx, ParamSpec, Policy, Signals,
                            kernel_eligible)
 from repro.core.collectives import Schedule
-from repro.core.faults import FaultSpec, _as_fault, is_faulty
+from repro.core.faults import (FaultSpec, LaneStatus, _as_fault,
+                               classify_lane, is_faulty)
 from repro.core.topology import (LINK_CLASS_ID, MAXHOP, N_LINK_CLASSES,
                                  Topology)
 
@@ -238,6 +239,12 @@ class Results:
     diverged: bool = False        # non-finite state; lane frozen at detection
     extend_exhausted: bool = False  # step budget ran out before completion
     lost: np.ndarray | None = None  # (F,) bytes dropped in-network (lossy mode)
+
+    @property
+    def status(self) -> LaneStatus:
+        """Typed run-health verdict (``faults.LaneStatus``); the serial
+        counterpart of ``BatchResults.lane_status()``."""
+        return classify_lane(self.diverged, self.deadlocked, self.finished)
 
 
 # ---------------------------------------------------------------------------

@@ -37,12 +37,48 @@ PR-2 engine goldens.
 from __future__ import annotations
 
 import dataclasses
+import enum
 
 import jax
 import numpy as np
 
 from repro.core.cc import ParamSpec
 from repro.core.topology import LINK_CLASS_ID, N_LINK_CLASSES
+
+
+class LaneStatus(str, enum.Enum):
+    """Typed health verdict of one simulated lane (or serial run).
+
+    A ``str`` subclass so every existing consumer keeps working unchanged:
+    ``status == "ok"`` compares by value, ``json.dump`` serializes to the
+    plain string, and CSV writers emit the bare label.  The precedence in
+    ``classify_lane`` mirrors the historical ad-hoc classification:
+    divergence trumps everything (the lane was frozen at the first
+    non-finite state, nothing after it is meaningful), an unfinished lane
+    with a detected pause cycle is ``DEADLOCKED``, an unfinished lane
+    without one ran out of step budget (``EXHAUSTED``), and a finished
+    lane that saw a pause cycle still reads ``DEADLOCKED`` — the cycle
+    resolved only because flows drained.
+    """
+    OK = "ok"
+    DIVERGED = "diverged"
+    DEADLOCKED = "deadlocked"
+    EXHAUSTED = "exhausted"
+
+    def __str__(self) -> str:          # f"{status}" -> "ok", not "LaneStatus.OK"
+        return self.value
+
+
+def classify_lane(diverged: bool, deadlocked: bool,
+                  finished: bool) -> LaneStatus:
+    """Map the engine's run-health observers onto one ``LaneStatus``."""
+    if diverged:
+        return LaneStatus.DIVERGED
+    if deadlocked:
+        return LaneStatus.DEADLOCKED
+    if not finished:
+        return LaneStatus.EXHAUSTED
+    return LaneStatus.OK
 
 _FAULT_DEFAULTS = dict(
     loss_rate=0.0, gbn=0.0, mtu=4096.0,

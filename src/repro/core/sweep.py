@@ -83,7 +83,8 @@ from repro.core.cc import Policy, stack_policies
 from repro.core.engine import (EngineConfig, FabricParams, Results, Simulator,
                                _as_fabric, _cfg_static, _init_carry,
                                _make_run, _next_pow2, _policy_cache_key)
-from repro.core.faults import FaultSpec, _as_fault, is_faulty
+from repro.core.faults import (FaultSpec, LaneStatus, _as_fault,
+                               classify_lane, is_faulty)
 
 
 def _resolve(policy) -> Policy:
@@ -127,23 +128,17 @@ class BatchResults:
             return np.zeros(self.n, bool)
         return self.deadlock_step >= 0
 
-    def lane_status(self) -> list[str]:
-        """Per-lane health: 'ok' | 'diverged' | 'deadlocked' |
-        'exhausted'.  A deadlocked-but-finished lane still reads
-        'deadlocked' (the cycle resolved only because flows drained)."""
-        out = []
-        for i in range(self.n):
-            if self.diverged is not None and self.diverged[i]:
-                out.append("diverged")
-            elif self.deadlocked[i] and not self.finished[i]:
-                out.append("deadlocked")
-            elif not self.finished[i]:
-                out.append("exhausted")
-            elif self.deadlocked[i]:
-                out.append("deadlocked")
-            else:
-                out.append("ok")
-        return out
+    def lane_status(self) -> list[LaneStatus]:
+        """Per-lane health as typed ``faults.LaneStatus`` (a ``str``
+        subclass, so ``== "ok"`` / JSON / CSV consumers are unchanged).
+        A deadlocked-but-finished lane still reads ``DEADLOCKED`` (the
+        cycle resolved only because flows drained)."""
+        dead = self.deadlocked
+        div = (np.zeros(self.n, bool) if self.diverged is None
+               else self.diverged)
+        return [classify_lane(bool(div[i]), bool(dead[i]),
+                              bool(self.finished[i]))
+                for i in range(self.n)]
 
     def best(self) -> int:
         """Index of the fastest *finished* member (lowest completion)."""
@@ -177,6 +172,60 @@ class BatchResults:
 
 _BATCH_CACHE: dict = {}
 _SHARD_CACHE: dict = {}
+# compiled-callable cache bounds, FIFO like the scenario cache
+# (SweepRunner.MAX_SIMS): a long campaign across many shapes/policies
+# would otherwise accumulate jitted executables without limit.  Eviction
+# counts surface in compile_stats()["evictions"].
+BATCH_CACHE_MAX = 64
+SHARD_CACHE_MAX = 64
+_CACHE_EVICTIONS = {"batch": 0, "shard": 0}
+
+
+def _cache_put(cache: dict, key, value, kind: str, bound: int):
+    while len(cache) >= max(bound, 1):
+        cache.pop(next(iter(cache)))
+        _CACHE_EVICTIONS[kind] += 1
+    cache[key] = value
+    return value
+
+
+# unhealthy-lane warning dedupe: one warning per (policy, status-kind set)
+# per process, so a 1000-chunk campaign hitting the same unhealthy regime
+# every chunk warns once instead of 1000 times.  reset_unhealthy_warnings
+# re-arms (tests asserting on the warning call it between runs).
+_UNHEALTHY_WARNED: set = set()
+
+
+def reset_unhealthy_warnings() -> None:
+    """Re-arm the deduplicated unhealthy-lane ``RuntimeWarning``."""
+    _UNHEALTHY_WARNED.clear()
+
+
+def _fmt_lane_indices(idx: list, cap: int = 8) -> str:
+    head = ", ".join(str(i) for i in idx[:cap])
+    return f"[{head}{', ...' if len(idx) > cap else ''}]"
+
+
+def _warn_unhealthy_lanes(batch: "BatchResults", B: int) -> None:
+    unhealthy = [(i, s) for i, s in enumerate(batch.lane_status())
+                 if s is not LaneStatus.OK]
+    if not unhealthy:
+        return
+    key = (batch.policy, frozenset(s for _, s in unhealthy))
+    if key in _UNHEALTHY_WARNED:
+        return
+    _UNHEALTHY_WARNED.add(key)
+    by_status: dict = {}
+    for i, s in unhealthy:
+        by_status.setdefault(s, []).append(i)
+    detail = "; ".join(f"{s}: lanes {_fmt_lane_indices(idx)}"
+                       for s, idx in by_status.items())
+    warnings.warn(
+        f"{len(unhealthy)}/{B} sweep lanes unhealthy ({detail}); healthy "
+        "lanes completed normally — inspect BatchResults.lane_status(). "
+        "Further identical warnings for this (policy, status) combination "
+        "are suppressed (sweep.reset_unhealthy_warnings() re-arms).",
+        RuntimeWarning, stacklevel=3)
 
 
 def _one_lane(policy: Policy, cfg: EngineConfig, plan, faulty: bool):
@@ -208,10 +257,13 @@ def _compiled_batch(policy: Policy, cfg: EngineConfig, plan,
     scenarios share the executable (fabric scalars on cfg are normalized
     out of the key; ``faulty`` keys the fault-injection compile path)."""
     key = (_policy_cache_key(policy), _cfg_static(cfg), plan, faulty)
-    if key not in _BATCH_CACHE:
+    fn = _BATCH_CACHE.get(key)
+    if fn is None:
         one = _one_lane(policy, cfg, plan, faulty)
-        _BATCH_CACHE[key] = jax.jit(jax.vmap(one, in_axes=(None, 0, 0, 0)))
-    return _BATCH_CACHE[key]
+        fn = _cache_put(_BATCH_CACHE, key,
+                        jax.jit(jax.vmap(one, in_axes=(None, 0, 0, 0))),
+                        "batch", BATCH_CACHE_MAX)
+    return fn
 
 
 def _mesh_key(mesh):
@@ -230,7 +282,8 @@ def _compiled_sharded_batch(policy: Policy, cfg: EngineConfig, plan,
     ``_BATCH_CACHE`` with the mesh identity in the key."""
     key = (_policy_cache_key(policy), _cfg_static(cfg), plan, faulty,
            _mesh_key(mesh))
-    if key not in _SHARD_CACHE:
+    fn = _SHARD_CACHE.get(key)
+    if fn is None:
         one = _one_lane(policy, cfg, plan, faulty)
         vm = jax.vmap(one, in_axes=(None, 0, 0, 0))
         axis = mesh.axis_names[0]
@@ -238,8 +291,9 @@ def _compiled_sharded_batch(policy: Policy, cfg: EngineConfig, plan,
         sharded = shard_map(vm, mesh=mesh,
                             in_specs=(PartitionSpec(), lanes, lanes, lanes),
                             out_specs=lanes, check_rep=False)
-        _SHARD_CACHE[key] = jax.jit(sharded)
-    return _SHARD_CACHE[key]
+        fn = _cache_put(_SHARD_CACHE, key, jax.jit(sharded),
+                        "shard", SHARD_CACHE_MAX)
+    return fn
 
 
 def compile_stats() -> dict:
@@ -257,6 +311,7 @@ def compile_stats() -> dict:
         "compiled_executables": n_exec(engine_mod._RUN_CACHE.values())
         + n_exec(_BATCH_CACHE.values())
         + n_exec(_SHARD_CACHE.values()),
+        "evictions": dict(_CACHE_EVICTIONS),
     }
 
 
@@ -337,6 +392,46 @@ def _stack_fault(base: FaultSpec, stacked: dict | None, B: int) -> FaultSpec:
     return FaultSpec(**leaves)
 
 
+def stack_policy_axis(policies=None, cc_overrides: list | None = None):
+    """Build the vmappable policy-axis inputs without dispatching.
+
+    Stacks ``policies`` into one product policy (``cc.stack_policies``)
+    and assembles its per-lane selector params: the traced ``_which``
+    column, the paired ``_wire`` factors, and member-namespaced
+    ``"<policy>.<param>"`` columns for any ``cc_overrides`` (positionally
+    aligned with ``policies``; only lane i reads member i's params).
+    Returns ``(stacked_policy, params, labels)`` — ready for
+    ``run_batch(..., policy_axis=labels)``.  ``run_policy_axis`` is the
+    dispatching wrapper; the campaign layer uses this to journal and
+    re-dispatch policy-axis chunks independently."""
+    members = [_resolve(p) for p in (policies or cc_mod.ALL_POLICIES)]
+    stacked_pol = stack_policies(members)
+    labels = stacked_pol.members
+    B = len(members)
+    params = {
+        "_which": np.arange(B, dtype=np.float32),
+        "_wire": np.asarray([m.wire_factor for m in members],
+                            np.float32),
+    }
+    if cc_overrides:
+        if len(cc_overrides) != B:
+            raise ValueError(f"cc_overrides has {len(cc_overrides)} "
+                             f"entries for {B} policies")
+        for i, (lab, m, over) in enumerate(
+                zip(labels, members, cc_overrides)):
+            if not over:
+                continue
+            m.check_tunable(over)
+            for k, v in over.items():
+                key = f"{lab}.{k}"
+                col = params.get(key)
+                if col is None:
+                    col = np.full(B, float(m.params[k]), np.float32)
+                col[i] = float(v)     # only lane i reads member i's params
+                params[key] = col
+    return stacked_pol, params, tuple(labels)
+
+
 # -- backend calibration ----------------------------------------------------
 
 _INF = float("inf")
@@ -409,17 +504,25 @@ def calibration_cache_path(backend: str | None = None,
 def save_calibration(cal: BackendCalibration,
                      path: str | None = None) -> str | None:
     """Persist a measured calibration to disk (JSON; inf encoded).  Best
-    effort: an unwritable cache dir is silently skipped (returns None)."""
+    effort: an unwritable cache dir is silently skipped (returns None).
+    Written tmp-file + atomic rename, so a run killed mid-write leaves
+    the previous table intact instead of a truncated JSON."""
     path = path or calibration_cache_path(cal.backend)
     rec = cal.record()
     rec["saved_at"] = time.time()
     rec["jax"] = jax.__version__
     rec["n_devices"] = len(jax.devices())
+    tmp = f"{path}.tmp.{os.getpid()}"
     try:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        with open(path, "w") as f:
+        with open(tmp, "w") as f:
             json.dump(rec, f, indent=1)
+        os.replace(tmp, path)
     except OSError:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
         return None
     return path
 
@@ -431,28 +534,42 @@ def load_calibration(backend: str | None = None, path: str | None = None,
 
     A table is rejected when it was measured under a different jax
     version or device count (both change the crossover), or — with
-    ``max_age_days`` — when older than that."""
+    ``max_age_days`` — when older than that.  A corrupt or truncated
+    file (e.g. left by a killed run predating the atomic-rename save)
+    is logged and ignored, never raised — a stale warm-start cache must
+    not take down the first sweep of a fresh process."""
     backend = backend or jax.default_backend()
     path = path or calibration_cache_path(backend)
     try:
         with open(path) as f:
             rec = json.load(f)
-    except (OSError, ValueError):
+    except OSError:
+        return None                     # absent cache: the normal cold start
+    except ValueError:
+        warnings.warn(f"ignoring corrupt calibration cache {path} "
+                      "(unparseable JSON; re-measure or delete it)",
+                      RuntimeWarning, stacklevel=2)
         return None
-    if rec.get("backend") != backend:
-        return None
-    if rec.get("jax") != jax.__version__:
-        return None
-    if rec.get("n_devices") != len(jax.devices()):
-        return None
-    if max_age_days is not None:
-        age = time.time() - float(rec.get("saved_at", 0.0))
-        if age > max_age_days * 86400.0:
+    try:
+        if rec.get("backend") != backend:
             return None
-    crossover = {k: (_INF if v == "inf" else float(v))
-                 for k, v in rec.get("crossover", {}).items()}
-    probes = tuple((p["kind"], int(p["n_flows"]), float(p["serial_s"]),
-                    float(p["batched_s"])) for p in rec.get("probes", ()))
+        if rec.get("jax") != jax.__version__:
+            return None
+        if rec.get("n_devices") != len(jax.devices()):
+            return None
+        if max_age_days is not None:
+            age = time.time() - float(rec.get("saved_at", 0.0))
+            if age > max_age_days * 86400.0:
+                return None
+        crossover = {k: (_INF if v == "inf" else float(v))
+                     for k, v in rec.get("crossover", {}).items()}
+        probes = tuple((p["kind"], int(p["n_flows"]), float(p["serial_s"]),
+                        float(p["batched_s"])) for p in rec.get("probes", ()))
+    except Exception:                   # valid JSON, wrong shape/types
+        warnings.warn(f"ignoring malformed calibration cache {path} "
+                      "(unexpected record shape; re-measure or delete it)",
+                      RuntimeWarning, stacklevel=2)
+        return None
     return BackendCalibration(backend=backend,
                               source=rec.get("source", "measured"),
                               crossover=crossover, probes=probes)
@@ -640,7 +757,8 @@ class SweepRunner:
     AUTO_CHUNK_PER_DEVICE = 256
 
     def __init__(self, cfg: EngineConfig | None = None, bucket: bool = True,
-                 mesh=None, chunk_lanes: int | str | None = "auto"):
+                 mesh=None, chunk_lanes: int | str | None = "auto",
+                 dispatch_hook=None):
         self.cfg = cfg or EngineConfig()
         self.bucket = bucket
         self._sims: dict = {}
@@ -649,6 +767,15 @@ class SweepRunner:
         # given.  See resolve_grid_mesh.
         self.mesh = resolve_grid_mesh(mesh)
         self.chunk_lanes = chunk_lanes
+        # called as dispatch_hook(lo, hi, B) immediately before each lane
+        # chunk is dispatched — the campaign layer's injectable failure
+        # point (an exception raised here aborts the dispatch exactly like
+        # an XLA OOM/compile failure would) and kill/progress probe
+        self.dispatch_hook = dispatch_hook
+
+    def _pre_dispatch(self, lo: int, hi: int, B: int) -> None:
+        if self.dispatch_hook is not None:
+            self.dispatch_hook(lo, hi, B)
 
     @property
     def n_mesh_devices(self) -> int:
@@ -798,31 +925,8 @@ class SweepRunner:
         leaves (length B, aligned with the policy lanes).  The result's
         ``policy_axis``/``policy_of`` label each lane.
         """
-        members = [_resolve(p) for p in (policies or cc_mod.ALL_POLICIES)]
-        stacked_pol = stack_policies(members)
-        labels = stacked_pol.members
-        B = len(members)
-        params = {
-            "_which": np.arange(B, dtype=np.float32),
-            "_wire": np.asarray([m.wire_factor for m in members],
-                                np.float32),
-        }
-        if cc_overrides:
-            if len(cc_overrides) != B:
-                raise ValueError(f"cc_overrides has {len(cc_overrides)} "
-                                 f"entries for {B} policies")
-            for i, (lab, m, over) in enumerate(
-                    zip(labels, members, cc_overrides)):
-                if not over:
-                    continue
-                m.check_tunable(over)
-                for k, v in over.items():
-                    key = f"{lab}.{k}"
-                    col = params.get(key)
-                    if col is None:
-                        col = np.full(B, float(m.params[k]), np.float32)
-                    col[i] = float(v)     # only lane i reads member i's params
-                    params[key] = col
+        stacked_pol, params, labels = stack_policy_axis(policies,
+                                                        cc_overrides)
         return self.run_batch(topo, sched, stacked_pol, params,
                               stacked_fabric=stacked_fabric,
                               fabric_params=fabric_params, cfg=cfg,
@@ -913,6 +1017,7 @@ class SweepRunner:
             fn = _compiled_batch(policy, cfg, sim.plan, faulty)
             chunk = self._chunk_size(B)
             if chunk >= B:                        # one dispatch, no padding
+                self._pre_dispatch(0, B, B)
                 out = fn(sim.pp, *lanes)
                 return jax.tree.map(np.asarray, out)
             parts, pending = [], None
@@ -922,6 +1027,7 @@ class SweepRunner:
                 if hi - lo < chunk:               # edge-repeat trailing pad
                     take = np.concatenate(
                         [take, np.full(chunk - (hi - lo), hi - 1)])
+                self._pre_dispatch(lo, hi, B)
                 got = fn(sim.pp, *jax.tree.map(lambda a: a[take], lanes))
                 if pending is not None:
                     lo0, hi0, out0 = pending
@@ -948,6 +1054,7 @@ class SweepRunner:
             if hi - lo < chunk:                   # edge-repeat trailing pad
                 take = np.concatenate(
                     [take, np.full(chunk - (hi - lo), hi - 1)])
+            self._pre_dispatch(lo, hi, B)
             got = fn(sim.pp, *jax.tree.map(lambda a: a[take[order]], lanes))
             if pending is not None:               # stream: gather the chunk
                 lo0, hi0, out0 = pending          # dispatched *last* round
@@ -1037,15 +1144,7 @@ class SweepRunner:
             diverged=diverged, deadlock_step=deadlock_step,
             storm_step=storm_step, extend_exhausted=extend_exhausted,
         )
-        unhealthy = [(i, s) for i, s in enumerate(batch.lane_status())
-                     if s != "ok"]
-        if unhealthy:
-            warnings.warn(
-                f"{len(unhealthy)}/{B} sweep lanes unhealthy "
-                f"({', '.join(f'#{i}:{s}' for i, s in unhealthy[:8])}"
-                f"{', ...' if len(unhealthy) > 8 else ''}); healthy lanes "
-                "completed normally — inspect BatchResults.lane_status()",
-                RuntimeWarning, stacklevel=2)
+        _warn_unhealthy_lanes(batch, B)
         return batch
 
     def grid(self, topo, sched, policy: Policy | str | None = None,

@@ -1,0 +1,444 @@
+"""Resilient campaign runner: journal/resume equivalence, the retry
+ladder, lane quarantine, deadline/watchdog enforcement, and the PR-10
+sweep satellites (warning dedupe, calibration hardening, bounded compile
+caches).
+
+The crash/resume contract under test: a campaign killed mid-run and
+resumed produces merged ``BatchResults`` bitwise-identical to an
+uninterrupted run, with at most one chunk of work repeated.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import sweep as sweep_mod
+from repro.core.campaign import (CampaignError, CampaignFingerprintMismatch,
+                                 CampaignTask, _applicable_ladder,
+                                 run_campaign, smoke_tasks)
+from repro.core.collectives import allreduce_1d
+from repro.core.engine import EngineConfig
+from repro.core.faults import LaneStatus, classify_lane
+from repro.core.sweep import (BackendCalibration, SweepRunner,
+                              load_calibration, reset_unhealthy_warnings,
+                              save_calibration)
+from repro.core.topology import single_switch
+
+pytestmark = pytest.mark.campaign
+
+CFG = EngineConfig(dt=2e-6, max_steps=600, max_extends=1, queue_stride=0)
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+RESULT_ARRAYS = ("completion_time", "t_finish", "pause_count", "delivered",
+                 "soft_cost", "finished", "diverged", "deadlock_step",
+                 "storm_step", "extend_exhausted")
+
+
+def scenario(n=4, mb=4e6):
+    topo = single_switch(n)
+    return topo, allreduce_1d(topo, list(range(n)), mb)
+
+
+def one_task(n_lanes=12, name="dcqcn_rai"):
+    topo, sched = scenario()
+    grid = np.geomspace(0.005, 0.2, n_lanes).astype(np.float32)
+    return CampaignTask(name, topo, sched, "dcqcn",
+                        stacked_params={"rai_frac": grid})
+
+
+def assert_batches_bitwise(a, b):
+    for k in RESULT_ARRAYS:
+        va, vb = getattr(a, k), getattr(b, k)
+        assert np.array_equal(np.asarray(va), np.asarray(vb),
+                              equal_nan=True), f"{k} differs"
+
+
+# ---------------------------------------------------------------------------
+# happy path + manifest schema
+# ---------------------------------------------------------------------------
+
+def test_campaign_completes_with_manifest(tmp_path):
+    task = one_task()
+    res = run_campaign([task], "happy", out_dir=str(tmp_path), cfg=CFG,
+                       chunk_lanes=4)
+    assert res.status == "complete" and res.ok
+    m = res.manifest
+    assert m["coverage"] == 1.0
+    ts = m["tasks"]["dcqcn_rai"]
+    assert ts["n_chunks"] == 3 and ts["coverage"] == 1.0
+    assert [c["status"] for c in ts["chunks"]] == ["done"] * 3
+    assert all(c["attempts"] == 1 and not c["demotions"]
+               for c in ts["chunks"])
+    assert ts["uncovered_lanes"] == [] and ts["lane_status"] == {"ok": 12}
+    # the manifest is on disk (atomic write) and json-round-trips
+    on_disk = json.load(open(os.path.join(res.out_dir, "manifest.json")))
+    assert on_disk["fingerprint"] == m["fingerprint"]
+    assert on_disk["status"] == "complete"
+    # journal holds one .npz per chunk
+    files = sorted(os.listdir(os.path.join(res.out_dir, "journal")))
+    assert [f for f in files if f.endswith(".npz")] == [
+        f"dcqcn_rai__c{i:04d}.npz" for i in range(3)]
+    # merged results == a direct run_batch (journal merge is lossless)
+    direct = SweepRunner(CFG).run_batch(
+        task.topo, task.sched, "dcqcn", task.stacked_params)
+    assert_batches_bitwise(res.results["dcqcn_rai"], direct)
+
+
+def test_campaign_refuses_unnamed_overwrite_and_fresh(tmp_path):
+    task = one_task()
+    run_campaign([task], "c", out_dir=str(tmp_path), cfg=CFG, chunk_lanes=4)
+    with pytest.raises(CampaignError, match="resume=True"):
+        run_campaign([task], "c", out_dir=str(tmp_path), cfg=CFG,
+                     chunk_lanes=4)
+    res = run_campaign([task], "c", out_dir=str(tmp_path), cfg=CFG,
+                       chunk_lanes=4, fresh=True)
+    assert res.ok
+
+
+def test_fingerprint_mismatch_raises(tmp_path):
+    run_campaign([one_task()], "fp", out_dir=str(tmp_path), cfg=CFG,
+                 chunk_lanes=4)
+    changed = one_task()
+    changed.stacked_params = {
+        "rai_frac": changed.stacked_params["rai_frac"] * 2.0}
+    with pytest.raises(CampaignFingerprintMismatch):
+        run_campaign([changed], "fp", out_dir=str(tmp_path), cfg=CFG,
+                     chunk_lanes=4, resume=True)
+
+
+# ---------------------------------------------------------------------------
+# crash / resume bitwise equivalence
+# ---------------------------------------------------------------------------
+
+def test_crash_resume_bitwise_identical(tmp_path):
+    """Injected mid-campaign crash (a BaseException the retry ladder must
+    NOT swallow), then resume: merged results bitwise-equal to an
+    uninterrupted run, exactly the journaled chunks are skipped."""
+    task = one_task()
+    ref = run_campaign([one_task()], "ref", out_dir=str(tmp_path / "a"),
+                       cfg=CFG, chunk_lanes=4)
+
+    calls = {"n": 0}
+
+    def hook(lo, hi, B):
+        calls["n"] += 1
+        if calls["n"] > 2:
+            raise KeyboardInterrupt("injected crash")
+
+    runner = SweepRunner(cfg=CFG, chunk_lanes=4, dispatch_hook=hook)
+    with pytest.raises(KeyboardInterrupt):
+        run_campaign([task], "crash", out_dir=str(tmp_path / "b"),
+                     runner=runner, cfg=CFG, chunk_lanes=4)
+    journal = tmp_path / "b" / "crash" / "journal"
+    done = sorted(f for f in os.listdir(journal) if f.endswith(".npz"))
+    assert len(done) == 2              # at most one in-flight chunk lost
+
+    res = run_campaign([one_task()], "crash", out_dir=str(tmp_path / "b"),
+                       cfg=CFG, chunk_lanes=4, resume=True)
+    assert res.ok
+    replayed = [c["status"] for c in
+                res.manifest["tasks"]["dcqcn_rai"]["chunks"]]
+    assert replayed == ["replayed", "replayed", "done"]
+    assert_batches_bitwise(res.results["dcqcn_rai"],
+                           ref.results["dcqcn_rai"])
+
+
+def test_subprocess_sigkill_resume(tmp_path):
+    """The full-fidelity variant: a real SIGKILL of the CLI mid-campaign,
+    then resume completes with full coverage and results bitwise-equal to
+    an uninterrupted in-process run of the same smoke campaign."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
+               REPRO_CALIBRATION_CACHE="0")
+    cmd = [sys.executable, os.path.join(REPO, "scripts", "run_campaign.py"),
+           "--smoke", "--out", str(tmp_path / "kill"),
+           "--chunk-lanes", "4", "--kill-after-chunks", "2"]
+    p = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                       timeout=600)
+    assert p.returncode == -signal.SIGKILL or p.returncode == 137, p.stderr
+    journal = tmp_path / "kill" / "smoke" / "journal"
+    assert len([f for f in os.listdir(journal) if f.endswith(".npz")]) == 2
+
+    p2 = subprocess.run(cmd[:-2] + ["--resume", "--expect-full"], env=env,
+                        capture_output=True, text=True, timeout=600)
+    assert p2.returncode == 0, p2.stdout + p2.stderr
+
+    # bitwise equivalence against an uninterrupted in-process run
+    tasks, cfg = smoke_tasks()
+    ref = run_campaign(tasks, "smoke", out_dir=str(tmp_path / "ref"),
+                       cfg=cfg, chunk_lanes=4)
+    resumed = run_campaign(tasks, name="smoke",
+                           out_dir=str(tmp_path / "kill"), cfg=cfg,
+                           chunk_lanes=4, resume=True)
+    assert resumed.ok
+    for tname in ref.results:
+        assert_batches_bitwise(resumed.results[tname], ref.results[tname])
+
+
+def test_corrupt_journal_chunk_rerun(tmp_path):
+    """A truncated chunk file (pre-atomic-rename kill, disk trouble) is
+    warned about and re-run on resume, not fatal."""
+    ref = run_campaign([one_task()], "corrupt", out_dir=str(tmp_path),
+                       cfg=CFG, chunk_lanes=4)
+    cpath = os.path.join(ref.out_dir, "journal", "dcqcn_rai__c0001.npz")
+    with open(cpath, "wb") as f:
+        f.write(b"\x00truncated")
+    with pytest.warns(RuntimeWarning, match="unreadable journal chunk"):
+        res = run_campaign([one_task()], "corrupt", out_dir=str(tmp_path),
+                           cfg=CFG, chunk_lanes=4, resume=True)
+    assert res.ok
+    statuses = [c["status"] for c in
+                res.manifest["tasks"]["dcqcn_rai"]["chunks"]]
+    assert statuses == ["replayed", "done", "replayed"]
+    assert_batches_bitwise(res.results["dcqcn_rai"],
+                           ref.results["dcqcn_rai"])
+
+
+# ---------------------------------------------------------------------------
+# retry ladder
+# ---------------------------------------------------------------------------
+
+def test_retry_ladder_demotion_order(tmp_path):
+    """Injected dispatch failures walk the ladder in order, every
+    demotion recorded; the serial bottom rung bypasses the failing
+    dispatch hook (it is the vmap dispatch that 'OOMs') and completes."""
+    task = one_task()
+    ladder = _applicable_ladder(SweepRunner(CFG), CFG)
+    assert ladder == ("half_chunk", "serial")   # CPU, no mesh, jnp step
+
+    def hook(lo, hi, B):
+        raise RuntimeError("injected OOM")
+
+    runner = SweepRunner(cfg=CFG, chunk_lanes=4, dispatch_hook=hook)
+    res = run_campaign([task], "ladder", out_dir=str(tmp_path),
+                       runner=runner, cfg=CFG, chunk_lanes=4,
+                       max_retries=3, backoff_s=0.0)
+    assert res.ok and res.status == "complete"
+    ts = res.manifest["tasks"]["dcqcn_rai"]
+    # chunk 0 walked the full ladder: vmap fail -> half_chunk fail ->
+    # serial success; demotion level then sticks for chunks 1-2
+    assert [d["rung"] for d in ts["demotions"]] == ["half_chunk", "serial"]
+    assert all(d["chunk"] == 0 for d in ts["demotions"])
+    c0 = ts["chunks"][0]
+    assert c0["attempts"] == 3 and c0["demotions"] == ["half_chunk",
+                                                       "serial"]
+    assert all(c["status"] == "done" for c in ts["chunks"])
+    assert all("injected OOM" in d["after_error"] for d in ts["demotions"])
+    # serial-rung results agree with the healthy vmap run
+    direct = SweepRunner(CFG).run_batch(
+        task.topo, task.sched, "dcqcn", task.stacked_params)
+    np.testing.assert_allclose(res.results["dcqcn_rai"].completion_time,
+                               direct.completion_time, rtol=1e-5)
+
+
+def test_retry_budget_exhausted_marks_partial(tmp_path):
+    """With too few retries to reach a working rung, the chunk is marked
+    failed (never silent) and the campaign continues: later chunks ride
+    the sticky demotion level and succeed, uncovered lanes are NaN-filled
+    and listed."""
+
+    def hook(lo, hi, B):
+        raise RuntimeError("injected OOM")
+
+    runner = SweepRunner(cfg=CFG, chunk_lanes=4, dispatch_hook=hook)
+    res = run_campaign([one_task()], "exhaust", out_dir=str(tmp_path),
+                       runner=runner, cfg=CFG, chunk_lanes=4,
+                       max_retries=1, backoff_s=0.0)
+    assert res.status == "partial" and not res.ok
+    ts = res.manifest["tasks"]["dcqcn_rai"]
+    assert ts["chunks"][0]["status"] == "failed"
+    assert len(ts["chunks"][0]["attempts"]) == 2
+    # chunks 1-2 start at the sticky level, reach serial, and succeed
+    assert [c["status"] for c in ts["chunks"][1:]] == ["done", "done"]
+    assert ts["uncovered_lanes"] == [0, 1, 2, 3]
+    assert ts["coverage"] == pytest.approx(8 / 12)
+    batch = res.results["dcqcn_rai"]
+    assert np.isnan(batch.completion_time[:4]).all()
+    assert np.isfinite(batch.completion_time[4:]).all()
+    assert res.manifest["coverage"] == pytest.approx(8 / 12)
+
+
+# ---------------------------------------------------------------------------
+# lane quarantine
+# ---------------------------------------------------------------------------
+
+def test_quarantine_relaxed_budget_heals_lanes(tmp_path):
+    """Lanes that exhaust a too-tight step budget are re-dispatched once
+    with max_steps * quarantine_relax and patched in when they heal."""
+    topo, sched = scenario()
+    tight = EngineConfig(dt=2e-6, max_steps=60, max_extends=0,
+                         queue_stride=0)
+    task = CampaignTask("tight", topo, sched, "dcqcn",
+                        stacked_params={"rai_frac": np.asarray(
+                            [0.01, 0.03, 0.1, 0.2], np.float32)})
+    res = run_campaign([task], "quar", out_dir=str(tmp_path), cfg=tight,
+                       chunk_lanes=4, quarantine_relax=32.0)
+    q = res.manifest["tasks"]["tight"]["quarantine"]
+    assert q is not None and q["status"] == "done"
+    assert q["lanes"] == [0, 1, 2, 3]
+    assert q["before"] == ["exhausted"] * 4
+    assert q["after"] == ["ok"] * 4 and q["patched"] == [0, 1, 2, 3]
+    batch = res.results["tight"]
+    assert batch.lane_status() == ["ok"] * 4
+    assert bool(batch.finished.all())
+    # the quarantine retry is journaled too: a resume replays it
+    res2 = run_campaign([task], "quar", out_dir=str(tmp_path), cfg=tight,
+                        chunk_lanes=4, quarantine_relax=32.0, resume=True)
+    assert res2.manifest["tasks"]["tight"]["quarantine"]["status"] == \
+        "replayed"
+    assert_batches_bitwise(res2.results["tight"], batch)
+
+
+def test_quarantine_off_leaves_lanes_flagged(tmp_path):
+    topo, sched = scenario()
+    tight = EngineConfig(dt=2e-6, max_steps=60, max_extends=0,
+                         queue_stride=0)
+    task = CampaignTask("tight", topo, sched, "dcqcn",
+                        stacked_params={"rai_frac": np.asarray(
+                            [0.01, 0.03], np.float32)})
+    res = run_campaign([task], "noquar", out_dir=str(tmp_path), cfg=tight,
+                       quarantine=False)
+    assert res.manifest["tasks"]["tight"]["quarantine"] is None
+    assert res.results["tight"].lane_status() == ["exhausted"] * 2
+    assert res.status == "complete"    # unhealthy-but-covered is complete
+
+
+# ---------------------------------------------------------------------------
+# deadline / watchdog
+# ---------------------------------------------------------------------------
+
+def test_deadline_checkpoints_partial_manifest(tmp_path):
+    res = run_campaign([one_task()], "ddl", out_dir=str(tmp_path), cfg=CFG,
+                       chunk_lanes=4, deadline_s=0.0)
+    assert res.status == "deadline" and not res.ok
+    assert res.manifest["coverage"] == 0.0
+    on_disk = json.load(open(os.path.join(res.out_dir, "manifest.json")))
+    assert on_disk["status"] == "deadline"
+    assert np.isnan(res.results["dcqcn_rai"].completion_time).all()
+    # ...and the journaled prefix resumes to completion without a deadline
+    res2 = run_campaign([one_task()], "ddl", out_dir=str(tmp_path),
+                        cfg=CFG, chunk_lanes=4, resume=True)
+    assert res2.ok
+
+
+def test_chunk_watchdog_timeout_checkpoints(tmp_path):
+    res = run_campaign([one_task()], "wdt", out_dir=str(tmp_path), cfg=CFG,
+                       chunk_lanes=4, chunk_timeout_s=1e-4)
+    assert res.status == "chunk_timeout" and not res.ok
+    ts = res.manifest["tasks"]["dcqcn_rai"]
+    assert ts["chunks"][0]["status"] == "timeout"
+    assert "watchdog" in ts["chunks"][0]["attempts"][0]["error"]
+
+
+# ---------------------------------------------------------------------------
+# typed lane status (tentpole satellite: enum instead of ad-hoc strings)
+# ---------------------------------------------------------------------------
+
+def test_lane_status_is_typed_enum():
+    topo, sched = scenario()
+    batch = SweepRunner(CFG).run_batch(topo, sched, "dcqcn",
+                                       {"rai_frac": np.asarray(
+                                           [0.01, 0.05], np.float32)})
+    statuses = batch.lane_status()
+    assert all(isinstance(s, LaneStatus) for s in statuses)
+    assert statuses == ["ok", "ok"]            # str-subclass compatibility
+    assert json.loads(json.dumps(statuses)) == ["ok", "ok"]
+    assert f"{statuses[0]}" == "ok"
+    r = SweepRunner(CFG).run(topo, sched, "dcqcn")
+    assert isinstance(r.status, LaneStatus) and r.status == "ok"
+    # precedence: diverged > deadlocked > exhausted
+    assert classify_lane(True, True, False) is LaneStatus.DIVERGED
+    assert classify_lane(False, True, True) is LaneStatus.DEADLOCKED
+    assert classify_lane(False, False, False) is LaneStatus.EXHAUSTED
+
+
+# ---------------------------------------------------------------------------
+# sweep satellites: warning dedupe, calibration hardening, cache bounds
+# ---------------------------------------------------------------------------
+
+def test_unhealthy_warning_names_lanes_and_dedupes():
+    topo, sched = scenario()
+    tight = EngineConfig(dt=2e-6, max_steps=60, max_extends=0,
+                         queue_stride=0)
+    runner = SweepRunner(tight)
+    stacked = {"rai_frac": np.asarray([0.01, 0.03], np.float32)}
+    reset_unhealthy_warnings()
+    with pytest.warns(RuntimeWarning, match=r"exhausted: lanes \[0, 1\]"):
+        runner.run_batch(topo, sched, "dcqcn", stacked)
+    # identical regime again: deduplicated
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        runner.run_batch(topo, sched, "dcqcn", stacked)
+    # re-armed after reset
+    reset_unhealthy_warnings()
+    with pytest.warns(RuntimeWarning, match="lanes unhealthy"):
+        runner.run_batch(topo, sched, "dcqcn", stacked)
+
+
+def test_calibration_corrupt_cache_ignored(tmp_path):
+    path = str(tmp_path / "repro_calibration_cpu.json")
+    with open(path, "w") as f:
+        f.write('{"backend": "cpu", "crossover": {"sweep": ')   # truncated
+    with pytest.warns(RuntimeWarning, match="corrupt calibration cache"):
+        assert load_calibration("cpu", path=path) is None
+    # valid JSON, wrong shape: also log-and-ignore
+    import jax
+    with open(path, "w") as f:
+        json.dump({"backend": "cpu", "jax": jax.__version__,
+                   "n_devices": len(jax.devices()),
+                   "probes": [{"bogus": 1}]}, f)
+    with pytest.warns(RuntimeWarning, match="malformed calibration cache"):
+        assert load_calibration("cpu", path=path) is None
+    # absent file stays silent (normal cold start)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert load_calibration("cpu",
+                                path=str(tmp_path / "nope.json")) is None
+
+
+def test_save_calibration_atomic(tmp_path):
+    cal = BackendCalibration(backend="cpu", source="measured",
+                             crossover={"sweep": 123.0})
+    path = str(tmp_path / "cal.json")
+    assert save_calibration(cal, path=path) == path
+    assert not [f for f in os.listdir(tmp_path) if ".tmp." in f]
+    loaded = load_calibration("cpu", path=path)
+    assert loaded is not None and loaded.crossover["sweep"] == 123.0
+
+
+def test_compile_caches_bounded_with_eviction_counts():
+    old_max = sweep_mod.BATCH_CACHE_MAX
+    saved = dict(sweep_mod._BATCH_CACHE)
+    before = sweep_mod._CACHE_EVICTIONS["batch"]
+    try:
+        sweep_mod._BATCH_CACHE.clear()
+        sweep_mod.BATCH_CACHE_MAX = 2
+        for i in range(4):
+            sweep_mod._cache_put(sweep_mod._BATCH_CACHE, f"k{i}", i,
+                                 "batch", sweep_mod.BATCH_CACHE_MAX)
+        assert len(sweep_mod._BATCH_CACHE) == 2
+        assert list(sweep_mod._BATCH_CACHE) == ["k2", "k3"]   # FIFO
+        stats = sweep_mod.compile_stats()
+        assert stats["evictions"]["batch"] == before + 2
+        assert "shard" in stats["evictions"]
+    finally:
+        sweep_mod.BATCH_CACHE_MAX = old_max
+        sweep_mod._BATCH_CACHE.clear()
+        sweep_mod._BATCH_CACHE.update(saved)
+
+
+def test_campaign_task_validation():
+    topo, sched = scenario()
+    with pytest.raises(CampaignError, match="no stacked axes"):
+        CampaignTask("empty", topo, sched, "dcqcn").n_lanes
+    with pytest.raises(CampaignError, match="inconsistent"):
+        CampaignTask("bad", topo, sched, "dcqcn",
+                     stacked_params={"rai_frac": np.zeros(3)},
+                     stacked_fault={"loss_rate": np.zeros(4)}).n_lanes
+    with pytest.raises(CampaignError, match="duplicate task names"):
+        run_campaign([one_task(name="a"), one_task(name="a")], "dup",
+                     out_dir="/tmp/never-created-xyz")

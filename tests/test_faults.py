@@ -25,11 +25,19 @@ from repro.core.faults import (FAULT_PARAM_SPECS, RECOVERY_MODES, FaultSpec,
                                is_faulty)
 from repro.core.scenario import (CollectiveSpec, FabricSpec, IncastSpec,
                                  ScenarioSpec)
-from repro.core.sweep import SweepRunner
+from repro.core.sweep import SweepRunner, reset_unhealthy_warnings
 from repro.core.topology import (NIC_BW, NIC_LAT, SWITCH_BUF, _Builder,
                                  single_switch)
 
 pytestmark = pytest.mark.fault
+
+
+@pytest.fixture(autouse=True)
+def _rearm_unhealthy_warning():
+    # the unhealthy-lane RuntimeWarning is deduplicated process-wide;
+    # re-arm it so each pytest.warns assertion here sees a fresh warning
+    # regardless of what ran before
+    reset_unhealthy_warnings()
 
 GOLD = json.load(open(os.path.join(os.path.dirname(__file__), "golden",
                                    "engine_seed.json")))
